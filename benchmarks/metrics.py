@@ -1,0 +1,121 @@
+"""metaQUAST-style assembly quality metrics (Table I stand-in).
+
+Ground truth comes from MGSim, so genome fraction / misassembly calls are
+exact rather than alignment-heuristic:
+  * genome fraction: w-mer window coverage of each reference,
+  * misassembly: a contig whose w-mers map to >1 genome, or to wildly
+    inconsistent positions on one genome (the metaQUAST relocation rule),
+  * contiguity: total length in pieces >= thresholds, N50/NGA-ish.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_RC = np.array([3, 2, 1, 0, 4], dtype=np.uint8)
+
+
+def _s(seq):
+    return "".join("ACGTN"[int(b)] for b in np.asarray(seq))
+
+
+def _rc(seq):
+    return _RC[np.asarray(seq)[::-1]]
+
+
+def build_ref_index(genomes, w=30):
+    """w-mer -> (genome_id, pos, strand) (unique w-mers only)."""
+    idx = {}
+    dup = set()
+    for gi, g in enumerate(genomes):
+        s = _s(g)
+        sr = _s(_rc(g))
+        L = len(s)
+        for strand, src in ((0, s), (1, sr)):
+            for i in range(L - w + 1):
+                key = src[i : i + w]
+                pos = i if strand == 0 else L - w - i
+                if key in idx or key in dup:
+                    dup.add(key)
+                    idx.pop(key, None)
+                    continue
+                idx[key] = (gi, pos, strand)
+    return idx, dup
+
+
+def contig_mappings(contig, ref_idx, w=30, stride=7):
+    """Sampled w-mer hits of one contig against the reference index."""
+    s = _s(contig)
+    hits = []
+    for i in range(0, max(1, len(s) - w + 1), stride):
+        h = ref_idx.get(s[i : i + w])
+        if h:
+            hits.append((i,) + h)
+    return hits
+
+
+def is_misassembled(hits, max_gap=100) -> bool:
+    """metaQUAST relocation rule: hits must be one genome, one strand, and
+    collinear within max_gap."""
+    if len(hits) < 2:
+        return False
+    genomes = {h[1] for h in hits}
+    if len(genomes) > 1:
+        return True
+    strands = {h[3] for h in hits}
+    if len(strands) > 1:
+        return True
+    strand = hits[0][3]
+    for (i1, _, p1, _), (i2, _, p2, _) in zip(hits, hits[1:]):
+        expect = (i2 - i1) if strand == 0 else (i1 - i2)
+        if abs((p2 - p1) - expect) > max_gap:
+            return True
+    return False
+
+
+def genome_fraction(pieces, genome, w=30) -> float:
+    windows = set()
+    for c in pieces:
+        s = _s(c)
+        sr = _s(_rc(c))
+        for src in (s, sr):
+            for i in range(len(src) - w + 1):
+                windows.add(src[i : i + w])
+    g = _s(genome)
+    n = len(g) - w + 1
+    if n <= 0:
+        return 0.0
+    return sum(1 for i in range(n) if g[i : i + w] in windows) / n
+
+
+def n50(lengths) -> int:
+    ls = sorted((int(x) for x in lengths), reverse=True)
+    total = sum(ls)
+    acc = 0
+    for L in ls:
+        acc += L
+        if acc * 2 >= total:
+            return L
+    return 0
+
+
+def evaluate(pieces, genomes, w=30, length_thresholds=(100, 250, 500)):
+    """Full Table-I style report for a list of assembled sequences."""
+    ref_idx, _ = build_ref_index(genomes, w)
+    lens = [len(p) for p in pieces]
+    report = {
+        "n_pieces": len(pieces),
+        "total_len": int(sum(lens)),
+        "n50": n50(lens),
+    }
+    for t in length_thresholds:
+        report[f"len_ge_{t}"] = int(sum(L for L in lens if L >= t))
+    mis = 0
+    for p in pieces:
+        hits = contig_mappings(p, ref_idx, w)
+        if is_misassembled(hits):
+            mis += 1
+    report["misassemblies"] = mis
+    fracs = [genome_fraction(pieces, g, w) for g in genomes]
+    report["genome_fraction"] = float(np.mean(fracs))
+    report["genome_fraction_min"] = float(np.min(fracs))
+    return report

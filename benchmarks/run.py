@@ -1,0 +1,60 @@
+"""Benchmark orchestrator: one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only quality,localization,...]
+
+Emits `name,us_per_call,derived` CSV lines per bench plus a roofline
+summary table if dry-run records exist (experiments/dryrun/*.json).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    benches = {}
+    from . import bench_quality, bench_localization, bench_scaling, \
+        bench_weak_scaling
+
+    benches["quality"] = bench_quality.main          # Table I
+    benches["localization"] = bench_localization.main  # Fig 3
+    benches["scaling"] = bench_scaling.main          # Fig 4/5
+    benches["weak_scaling"] = bench_weak_scaling.main  # Table II
+
+    failed = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"\n===== bench: {name} =====")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[{name} done in {time.time() - t0:.1f}s]")
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    # roofline summary (if the dry-run has produced records)
+    try:
+        from repro.launch import roofline
+
+        table = roofline.summarize("experiments/dryrun/*.json")
+        if table.count("\n") > 1:
+            print("\n===== roofline summary (from dry-run) =====")
+            print(table)
+    except Exception:
+        pass
+    if failed:
+        print(f"\nFAILED benches: {failed}")
+        sys.exit(1)
+    print("\nall benches passed")
+
+
+if __name__ == "__main__":
+    main()

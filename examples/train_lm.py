@@ -1,0 +1,42 @@
+"""Train a ~100M-parameter LM for a few hundred steps (end-to-end driver).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the xlstm-125m architecture at a reduced width (so a few hundred CPU
+steps finish in minutes), the production train loop (launch/train.py) with
+checkpointing, auto-resume, the straggler monitor, and the synthetic
+Zipf+bigram stream whose structure a healthy model visibly learns (loss
+drops well below the unigram entropy).
+"""
+import argparse
+import dataclasses
+
+from repro.launch.train import TrainConfig, train
+from repro.train.optimizer import AdamConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--ckpt-dir", default="checkpoints/example")
+    args = ap.parse_args()
+    tcfg = TrainConfig(
+        steps=args.steps,
+        batch=8,
+        seq=128,
+        ckpt_every=50,
+        ckpt_dir=args.ckpt_dir,
+        log_every=20,
+        adam=AdamConfig(lr=1e-3, weight_decay=0.01),
+    )
+    # smoke=True gives the reduced same-family config (~100M-class on CPU)
+    _, losses, monitor = train(args.arch, tcfg, smoke=True)
+    print(f"\nloss: start {losses[0]:.3f} -> end {losses[-1]:.3f}")
+    assert losses[-1] < losses[0] - 0.3, "model failed to learn"
+    print("training learned the planted structure; "
+          f"stragglers flagged: {len(monitor.flagged)}")
+
+
+if __name__ == "__main__":
+    main()

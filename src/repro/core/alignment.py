@@ -1,0 +1,203 @@
+"""merAligner (paper §II-F, [20]): distributed seed-and-extend alignment.
+
+Seeds (k-mers of the reads) are looked up in a *seed index* — a hash table
+over the contig k-mers (UC3 Global Read-Only phase).  Each read votes among
+its seeds' candidate placements, keeps the best two distinct-contig
+candidates (the second hit is what scaffolding's splint detection consumes),
+and verifies each candidate by extension.
+
+Extension scoring here is vectorized Hamming extension (the read model of
+the pipeline is substitution-only Illumina, matching the paper's data); the
+banded Smith-Waterman Pallas kernel (kernels/sw_extend.py) provides the
+gapped path and is validated against the same interface.
+
+TPU adaptation notes: merAligner's software cache for remote seed buckets
+(UC3) is replaced by read localization (§II-I / localization.py) which
+makes seed traffic owner-local by construction; the voting step replaces
+merAligner's per-seed chaining loop with an O(S^2) agreement count over the
+static seed positions of each read (S is small).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import dht, kmer
+from .types import ContigSet, ReadSet
+
+NONE = jnp.int32(-1)
+
+
+class SeedIndex(NamedTuple):
+    table: dht.HashTable
+    contig: jnp.ndarray  # [cap] int32 contig of the (unique) seed
+    pos: jnp.ndarray     # [cap] int32 position of seed start on the contig
+    flip: jnp.ndarray    # [cap] bool: stored canonical form is the RC of the
+    #                       contig's forward-strand k-mer
+    multi: jnp.ndarray   # [cap] bool seed occurs at >1 contig position
+    seed_len: int
+
+
+class Alignments(NamedTuple):
+    """Top-2 distinct-contig placements per read.
+
+    cstart is the contig coordinate where read base 0 lands (may be
+    negative / past the end for overhanging reads).  orient=1 means the
+    read aligns as its reverse complement.
+    """
+
+    contig: jnp.ndarray   # [R, 2] int32 (-1 absent)
+    cstart: jnp.ndarray   # [R, 2] int32
+    orient: jnp.ndarray   # [R, 2] uint8
+    matches: jnp.ndarray  # [R, 2] int32
+    overlap: jnp.ndarray  # [R, 2] int32
+
+
+def build_seed_index(
+    contigs: ContigSet, alive, *, seed_len: int, capacity: int
+) -> SeedIndex:
+    """Index every unique contig k-mer; multi-occurrence seeds are flagged."""
+    C, Lmax = contigs.bases.shape
+    lengths = jnp.where(alive, contigs.lengths, 0)
+    hi, lo, valid, _, _ = kmer.extract_kmers(contigs.bases, lengths, k=seed_len)
+    chi, clo, flip = kmer.canonical(hi, lo, k=seed_len)
+    W = Lmax - seed_len + 1
+    cids = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[:, None], (C, W))
+    poss = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32)[None, :], (C, W))
+    flat = lambda x: x.reshape((-1,))
+    fhi, flo, fvalid = flat(chi), flat(clo), flat(valid)
+    fcid, fpos, fflip = flat(cids), flat(poss), flat(flip)
+    # sort by key to detect multi-occurrence seeds
+    shi = jnp.where(fvalid, fhi, jnp.uint32(0xFFFFFFFF))
+    slo = jnp.where(fvalid, flo, jnp.uint32(0xFFFFFFFF))
+    idx = jnp.arange(fhi.shape[0], dtype=jnp.int32)
+    shi_s, slo_s, perm = jax.lax.sort((shi, slo, idx), num_keys=2)
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), (shi_s[1:] != shi_s[:-1]) | (slo_s[1:] != slo_s[:-1])]
+    )
+    dup = ~first
+    valid_s = fvalid[perm]
+    # a key is multi iff any member beyond the first is valid
+    # (propagate per-key: segment-max of dup over the group)
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+    nseg = fhi.shape[0]
+    group_multi = jnp.zeros((nseg,), bool).at[seg].max(dup & valid_s)
+    is_rep = first & valid_s
+    table, slots = dht.build(shi_s, slo_s, is_rep, capacity=capacity)
+    cap = table.capacity
+    sel = jnp.where(is_rep, slots, cap)
+    contig_a = jnp.full((cap,), NONE).at[sel].set(fcid[perm], mode="drop")
+    pos_a = jnp.full((cap,), NONE).at[sel].set(fpos[perm], mode="drop")
+    flip_a = jnp.zeros((cap,), bool).at[sel].set(fflip[perm], mode="drop")
+    multi_a = jnp.zeros((cap,), bool).at[sel].set(group_multi[seg], mode="drop")
+    return SeedIndex(
+        table=table, contig=contig_a, pos=pos_a, flip=flip_a, multi=multi_a,
+        seed_len=seed_len,
+    )
+
+
+def _seed_positions(read_len_max: int, seed_len: int, stride: int):
+    pos = list(range(0, read_len_max - seed_len + 1, stride))
+    last = read_len_max - seed_len
+    if pos[-1] != last:
+        pos.append(last)
+    return pos
+
+
+@functools.partial(jax.jit, static_argnames=("seed_len", "stride"))
+def _candidates(reads: ReadSet, index: SeedIndex, *, seed_len: int, stride: int):
+    """Per-seed candidate placements [R, S] (contig, cstart, orient)."""
+    hi, lo, valid, _, _ = kmer.extract_kmers(reads.bases, reads.lengths, k=seed_len)
+    pos_list = _seed_positions(reads.max_len, seed_len, stride)
+    S = len(pos_list)
+    pcols = jnp.array(pos_list, dtype=jnp.int32)
+    shi = hi[:, pcols]
+    slo = lo[:, pcols]
+    sval = valid[:, pcols]
+    chi, clo, rflip = kmer.canonical(shi, slo, k=seed_len)
+    slots = dht.lookup(index.table, chi, clo, sval)
+    ok = (slots >= 0) & ~index.multi[jnp.clip(slots, 0)]
+    cc = jnp.where(ok, index.contig[jnp.clip(slots, 0)], NONE)
+    cpos = index.pos[jnp.clip(slots, 0)]
+    cflip = index.flip[jnp.clip(slots, 0)]
+    # same-strand iff the read seed and contig seed canonicalized with the
+    # same flip
+    same = rflip == cflip
+    j = jnp.broadcast_to(pcols[None, :], cc.shape)
+    L = reads.lengths[:, None]
+    cstart_fwd = cpos - j
+    # RC placement: read base L-1 maps to cstart; base 0 maps to
+    # cpos + seed_len - 1 ... derive: contig coord of read base i (rc) =
+    # cstart_rc + (L - 1 - i); seed start j covers read bases j..j+sl-1 →
+    # contig pos cpos..cpos+sl-1 hold read bases j+sl-1..j (complemented):
+    # cpos = cstart_rc + (L - 1 - (j + seed_len - 1))
+    cstart_rc = cpos - (L - j - seed_len)
+    cstart = jnp.where(same, cstart_fwd, cstart_rc)
+    orient = jnp.where(same, 0, 1).astype(jnp.uint8)
+    return (
+        jnp.where(ok, cc, NONE),
+        jnp.where(ok, cstart, 0),
+        orient,
+    )
+
+
+def _verify(reads: ReadSet, contigs: ContigSet, cid, cstart, orient):
+    """Hamming-extension verification of one candidate per read."""
+    R, L = reads.bases.shape
+    i = jnp.arange(L, dtype=jnp.int32)[None, :]
+    fwd_cpos = cstart[:, None] + i
+    rc_cpos = cstart[:, None] + (reads.lengths[:, None] - 1 - i)
+    cpos = jnp.where(orient[:, None] == 0, fwd_cpos, rc_cpos)
+    clen = jnp.where(cid >= 0, contigs.lengths[jnp.clip(cid, 0)], 0)
+    inside = (cpos >= 0) & (cpos < clen[:, None]) & (i < reads.lengths[:, None])
+    cbase = contigs.bases[jnp.clip(cid, 0)[:, None], jnp.clip(cpos, 0)]
+    rbase = reads.bases[:, : L]
+    rbase_cmp = jnp.where(orient[:, None] == 0, rbase, kmer.complement_base(rbase))
+    match = inside & (cbase == rbase_cmp) & (rbase < 4)
+    return match.sum(axis=-1), inside.sum(axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("seed_len", "stride", "min_frac"))
+def align_reads(
+    reads: ReadSet,
+    contigs: ContigSet,
+    index: SeedIndex,
+    *,
+    seed_len: int,
+    stride: int = 16,
+    min_frac: float = 0.9,
+) -> Alignments:
+    cc, cstart, orient = _candidates(reads, index, seed_len=seed_len, stride=stride)
+    R, S = cc.shape
+    # vote: support of candidate s = #seeds proposing the same placement
+    same = (
+        (cc[:, :, None] == cc[:, None, :])
+        & (cstart[:, :, None] == cstart[:, None, :])
+        & (orient[:, :, None] == orient[:, None, :])
+        & (cc[:, :, None] >= 0)
+    )
+    support = same.sum(axis=-1)
+    support = jnp.where(cc >= 0, support, 0)
+    best = jnp.argmax(support, axis=-1)
+    take = lambda a, idx: jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
+    c1, s1, o1 = take(cc, best), take(cstart, best), take(orient, best)
+    # best distinct-contig second candidate
+    support2 = jnp.where((cc != c1[:, None]) & (cc >= 0), support, 0)
+    best2 = jnp.argmax(support2, axis=-1)
+    has2 = jnp.max(support2, axis=-1) > 0
+    c2 = jnp.where(has2, take(cc, best2), NONE)
+    s2, o2 = take(cstart, best2), take(orient, best2)
+    m1, ov1 = _verify(reads, contigs, c1, s1, o1)
+    m2, ov2 = _verify(reads, contigs, c2, s2, o2)
+    ok1 = (c1 >= 0) & (m1 >= min_frac * jnp.maximum(ov1, 1)) & (ov1 >= index.seed_len)
+    ok2 = (c2 >= 0) & (m2 >= min_frac * jnp.maximum(ov2, 1)) & (ov2 >= index.seed_len)
+    return Alignments(
+        contig=jnp.stack([jnp.where(ok1, c1, NONE), jnp.where(ok2, c2, NONE)], axis=1),
+        cstart=jnp.stack([s1, s2], axis=1),
+        orient=jnp.stack([o1, o2], axis=1),
+        matches=jnp.stack([m1, m2], axis=1),
+        overlap=jnp.stack([ov1, ov2], axis=1),
+    )

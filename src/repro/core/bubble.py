@@ -1,0 +1,95 @@
+"""Bubble merging + hair removal (paper §II-D).
+
+SNP bubbles: two same-length contigs whose endpoint k-mers hang off the
+same pair of fork vertices.  The paper builds a bubble-contig graph in a
+distributed hash table and traverses it speculatively; the TPU-idiomatic
+equivalent groups contigs by their (fork_a, fork_b, length) signature with
+one sort, then keeps the deepest member of each group — same fixed point,
+no atomics (DESIGN.md §2).
+
+Hair: dead-end dangling contigs shorter than 2k attached to the graph at
+exactly one end are likely error artifacts and removed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NONE = jnp.int32(-1)
+
+
+class BubbleResult(NamedTuple):
+    alive: jnp.ndarray          # [C] bool survivors
+    merged_away: jnp.ndarray    # [C] bool removed as non-representative bubble arm
+    hair: jnp.ndarray           # [C] bool removed as hair
+
+
+def _side_signature(ends_nbr_side):
+    """Collapse a contig end's <=4 fork rows into (min_row, fork_count)."""
+    rows = ends_nbr_side  # [C, 4]
+    present = rows >= 0
+    big = jnp.int32(0x7FFFFFFF)
+    min_row = jnp.min(jnp.where(present, rows, big), axis=-1)
+    count = present.sum(axis=-1)
+    return jnp.where(count > 0, min_row, NONE), count
+
+
+@functools.partial(jax.jit, static_argnames=("k", "merge_long"))
+def merge_bubbles(
+    contigs_lengths,
+    contigs_depths,
+    ends_nbr,
+    alive_in=None,
+    *,
+    k: int,
+    merge_long: bool = False,
+) -> BubbleResult:
+    """Mark bubble arms and hair dead.
+
+    Args:
+      contigs_lengths: [C] int32.
+      contigs_depths:  [C] float32.
+      ends_nbr: [C, 2, 4] int32 fork k-mer rows per end (from
+        dbg.end_neighbor_forks).
+      merge_long: also merge same-signature paths longer than 2k (Megahit
+        option: trades strain preservation for contiguity).
+    """
+    C = contigs_lengths.shape[0]
+    alive = (contigs_lengths > 0) if alive_in is None else alive_in & (contigs_lengths > 0)
+    sigL, cntL = _side_signature(ends_nbr[:, 0])
+    sigR, cntR = _side_signature(ends_nbr[:, 1])
+    # orientation-normalize the unordered endpoint pair
+    a = jnp.minimum(sigL, sigR)
+    b = jnp.maximum(sigL, sigR)
+    bubble_eligible = alive & (sigL >= 0) & (sigR >= 0)
+    if not merge_long:
+        bubble_eligible = bubble_eligible & (contigs_lengths <= 2 * k + 1)
+    # group key: (a, b, length); sort and mark non-best members per group
+    big = jnp.int32(0x7FFFFFFF)
+    ka = jnp.where(bubble_eligible, a, big)
+    kb = jnp.where(bubble_eligible, b, big)
+    kl = jnp.where(bubble_eligible, contigs_lengths, big)
+    # sort by key then by depth DESC so the group's first row is its best
+    neg_depth = -contigs_depths
+    idx = jnp.arange(C, dtype=jnp.int32)
+    ska, skb, skl, snd, sidx = jax.lax.sort((ka, kb, kl, neg_depth, idx), num_keys=4)
+    same_as_prev = jnp.concatenate(
+        [
+            jnp.zeros((1,), bool),
+            (ska[1:] == ska[:-1])
+            & (skb[1:] == skb[:-1])
+            & (skl[1:] == skl[:-1])
+            & (ska[1:] != big),
+        ]
+    )
+    merged_sorted = same_as_prev  # everyone but the deepest of each group
+    merged = jnp.zeros((C,), bool).at[sidx].set(merged_sorted)
+    merged = merged & bubble_eligible
+    # hair: short, attached at exactly one end
+    one_sided = ((cntL > 0) & (cntR == 0)) | ((cntL == 0) & (cntR > 0))
+    hair = alive & one_sided & (contigs_lengths < 2 * k)
+    new_alive = alive & ~merged & ~hair
+    return BubbleResult(alive=new_alive, merged_away=merged, hair=hair)

@@ -1,0 +1,51 @@
+"""Shiloach–Vishkin connected components (paper §III-C, [24]).
+
+The paper extracts parallelism for the inherently-sequential contig-graph
+traversal by partitioning it into connected components.  This is the same
+algorithm — deterministic min-label hooking plus pointer-jumping
+shortcuts — expressed as bulk scatter/gather rounds (UPC's asynchronous
+hooking becomes a scatter-min, which is associative and therefore
+order-free, matching the paper's correctness argument).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def connected_components(u, v, valid, n: int, max_rounds: int | None = None):
+    """Component label (min vertex id) for each of n vertices.
+
+    Args:
+      u, v: [E] int32 edge endpoints.
+      valid: [E] bool live edges.
+    Returns:
+      [n] int32 labels; label[i] == min vertex id of i's component.
+    """
+    rounds = max_rounds or (2 * max(1, math.ceil(math.log2(max(n, 2)))) + 2)
+    parent = jnp.arange(n, dtype=jnp.int32)
+    eu = jnp.where(valid, u, 0)
+    ev = jnp.where(valid, v, 0)
+
+    def body(state):
+        parent, _ = state
+        pu = parent[eu]
+        pv = parent[ev]
+        lo = jnp.minimum(pu, pv)
+        hi = jnp.maximum(pu, pv)
+        sel = jnp.where(valid, hi, n)
+        new_parent = parent.at[sel].min(lo, mode="drop")
+        # pointer jumping (shortcut twice per round)
+        new_parent = new_parent[new_parent]
+        new_parent = new_parent[new_parent]
+        changed = jnp.any(new_parent != parent)
+        return new_parent, changed
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    parent, _ = jax.lax.while_loop(cond, body, (parent, jnp.array(True)))
+    return parent

@@ -1,0 +1,81 @@
+"""Parallel chain formation by pointer doubling.
+
+HipMer/MetaHipMer traverse the de Bruijn graph speculatively: processors
+pick random seeds, walk with remote atomics, and abort on collision
+(§II-C/§II-D).  TPUs have no remote atomics, but the graphs in question are
+functional (<=1 successor and <=1 predecessor per node after mutual-
+agreement filtering), so chains can be contracted deterministically in
+O(log N) bulk-synchronous rounds of pointer doubling — the same result the
+speculative algorithm produces, with no aborts and no serial pickup phase.
+
+Cycles (possible in genomes: plasmids, perfect repeats) are detected when a
+node's accumulated distance reaches N, then broken at the minimum-index
+node of each cycle, mirroring the paper's deterministic tie-breaking.
+
+All functions operate on a plain `pred` pointer array (int32, -1 = none);
+orientation is handled by the caller through the doubled (oriented-node)
+graph representation, which keeps this module payload-free.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NONE = jnp.int32(-1)
+
+
+class Chains(NamedTuple):
+    head: jnp.ndarray      # [N] int32 chain head node (self for heads)
+    dist: jnp.ndarray      # [N] int32 distance from head
+    was_cycle: jnp.ndarray  # [N] bool node belonged to a cycle (broken at min)
+
+
+def _double(pred, n_rounds: int):
+    """Pointer doubling: returns (root, dist, minv) after n_rounds jumps."""
+    n = pred.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    has = pred >= 0
+    root = jnp.where(has, pred, idx)
+    dist = has.astype(jnp.int32)
+    minv = jnp.minimum(idx, jnp.where(has, pred, idx))
+
+    def body(_, state):
+        root, dist, minv = state
+        dist = dist + dist[root]
+        minv = jnp.minimum(minv, minv[root])
+        root = root[root]
+        return root, dist, minv
+
+    return jax.lax.fori_loop(0, n_rounds, body, (root, dist, minv))
+
+
+def form_chains(pred) -> Chains:
+    """Chain head + offset for every node of a functional pred-graph.
+
+    pred[i] in [-1, N): at most one predecessor per node, and no two nodes
+    share a predecessor (caller enforces via mutual-agreement masking).
+    """
+    n = pred.shape[0]
+    rounds = max(1, math.ceil(math.log2(max(n, 2)))) + 1
+    root, dist, minv = _double(pred, rounds)
+    in_cycle = dist >= n
+    # break each cycle at its minimum-index node, then re-resolve
+    idx = jnp.arange(n, dtype=jnp.int32)
+    cut = in_cycle & (idx == minv)
+    pred2 = jnp.where(cut, NONE, pred)
+    root2, dist2, _ = _double(pred2, rounds)
+    return Chains(head=root2, dist=dist2, was_cycle=in_cycle)
+
+
+def chain_stats(chains: Chains, alive=None):
+    """Per-node chain length (= #nodes in its chain), via segment max."""
+    n = chains.head.shape[0]
+    if alive is None:
+        alive = jnp.ones((n,), bool)
+    seg = jnp.where(alive, chains.head, n)
+    maxd = jnp.full((n,), -1, jnp.int32).at[seg].max(chains.dist, mode="drop")
+    length = jnp.where(alive, maxd[chains.head] + 1, 0)
+    return length

@@ -1,0 +1,159 @@
+"""Open-addressed hash table for dual-lane keys, bulk-synchronous build.
+
+This is the TPU-idiomatic replacement for the paper's UPC distributed hash
+tables (§II-A).  UPC resolves insert races with remote atomics; TPUs have
+none, so insertion happens in *rounds*: every pending key scatters its index
+into its current probe slot, re-gathers to see whether it won, and losers
+advance to the next probe slot (linear probing).  Winners never move, so the
+classic linear-probing invariant — an empty slot terminates every probe
+chain that passes it — holds, and lookups can stop at the first empty slot.
+
+The table is insertion-order independent in the set sense (same keys occupy
+the same *set* of slots regardless of arrival order), which is exactly the
+paper's Use-case-1 commutativity argument.
+
+Capacity must be a power of two.  Keys are (hi, lo) uint32 pairs with
+hi != EMPTY_HI (guaranteed for packed k-mers, k <= 31).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kmer
+from .types import EMPTY_HI
+
+NOT_FOUND = jnp.int32(-1)
+
+
+class HashTable(NamedTuple):
+    slot_hi: jnp.ndarray   # [cap] uint32, EMPTY_HI when unused
+    slot_lo: jnp.ndarray   # [cap] uint32
+    used: jnp.ndarray      # [cap] bool
+    max_probe: jnp.ndarray  # scalar int32: probe bound for lookups
+
+    @property
+    def capacity(self) -> int:
+        return self.slot_hi.shape[0]
+
+
+def empty_table(capacity: int) -> HashTable:
+    assert capacity & (capacity - 1) == 0, "capacity must be a power of two"
+    return HashTable(
+        slot_hi=jnp.full((capacity,), EMPTY_HI, jnp.uint32),
+        slot_lo=jnp.zeros((capacity,), jnp.uint32),
+        used=jnp.zeros((capacity,), bool),
+        max_probe=jnp.int32(0),
+    )
+
+
+def insert(table: HashTable, hi, lo, valid):
+    """Insert keys (deduplicating against existing entries).
+
+    Args:
+      hi, lo: [n] uint32 key lanes.
+      valid:  [n] bool; invalid lanes are ignored.
+    Returns:
+      (table', slots): slots[i] is the slot index of key i (-1 if invalid
+      or the table overflowed for that key).
+    """
+    cap = table.capacity
+    mask = jnp.uint32(cap - 1)
+    n = hi.shape[0]
+    h0 = (kmer.kmer_hash(hi, lo) & mask).astype(jnp.int32)
+
+    def cond(state):
+        _, _, _, done, _, probes = state
+        # stop when everyone is done or a key has probed the whole table
+        return jnp.any(~done) & (jnp.max(probes) < cap)
+
+    def body(state):
+        slot_hi, slot_lo, used, done, attempt, probes = state
+        pending = ~done
+        cur_used = used[attempt]
+        cur_match = cur_used & kmer.equal(slot_hi[attempt], slot_lo[attempt], hi, lo)
+        # pending keys whose current slot already holds the same key: dedupe
+        done_dup = pending & cur_match
+        # pending keys probing an empty slot race to claim it
+        can_try = pending & ~cur_used
+        owner = jnp.full((cap,), -1, jnp.int32)
+        idx = jnp.arange(n, dtype=jnp.int32)
+        owner = owner.at[jnp.where(can_try, attempt, cap)].max(
+            idx, mode="drop", indices_are_sorted=False
+        )
+        winner = can_try & (owner[attempt] == idx)
+        slot_hi = slot_hi.at[jnp.where(winner, attempt, cap)].set(hi, mode="drop")
+        slot_lo = slot_lo.at[jnp.where(winner, attempt, cap)].set(lo, mode="drop")
+        used = used.at[jnp.where(winner, attempt, cap)].set(True, mode="drop")
+        new_done = done | winner | done_dup
+        # Only keys that saw a slot OCCUPIED BY A DIFFERENT KEY advance.
+        # Race losers stay put: next round the contested slot is used, and
+        # they either dedupe against it (same key) or advance (different) —
+        # this is what keeps duplicate keys from leap-frogging past their
+        # twin and landing in two slots.
+        advance = pending & cur_used & ~cur_match
+        attempt = jnp.where(advance, (attempt + 1) & (cap - 1), attempt)
+        probes = probes + advance.astype(jnp.int32)
+        return slot_hi, slot_lo, used, new_done, attempt, probes
+
+    init = (
+        table.slot_hi,
+        table.slot_lo,
+        table.used,
+        ~valid,
+        h0,
+        jnp.zeros((n,), jnp.int32),
+    )
+    slot_hi, slot_lo, used, done, attempt, probes = jax.lax.while_loop(cond, body, init)
+    overflow = ~done & valid
+    slots = jnp.where(valid & ~overflow, attempt, NOT_FOUND)
+    max_probe = jnp.maximum(table.max_probe, jnp.max(probes))
+    return (
+        HashTable(slot_hi=slot_hi, slot_lo=slot_lo, used=used, max_probe=max_probe),
+        slots,
+    )
+
+
+def build(hi, lo, valid, capacity: int):
+    """Build a fresh table from keys (duplicates collapse to one slot)."""
+    return insert(empty_table(capacity), hi, lo, valid)
+
+
+def lookup(table: HashTable, hi, lo, valid=None):
+    """Find slot indices for query keys; -1 when absent.
+
+    Probes at most max_probe+1 slots; an empty slot ends the chain early.
+    """
+    cap = table.capacity
+    mask = jnp.uint32(cap - 1)
+    q = hi.shape
+    if valid is None:
+        valid = jnp.ones(q, bool)
+    attempt = (kmer.kmer_hash(hi, lo) & mask).astype(jnp.int32)
+    result = jnp.full(q, NOT_FOUND)
+    done = ~valid
+    bound = table.max_probe + 1
+
+    def cond(state):
+        _, done, _, i = state
+        return jnp.any(~done) & (i <= bound)
+
+    def body(state):
+        attempt, done, result, i = state
+        u = table.used[attempt]
+        match = u & kmer.equal(table.slot_hi[attempt], table.slot_lo[attempt], hi, lo)
+        result = jnp.where(match & ~done, attempt, result)
+        done = done | match | ~u
+        attempt = jnp.where(done, attempt, (attempt + 1) & (cap - 1))
+        return attempt, done, result, i + 1
+
+    _, _, result, _ = jax.lax.while_loop(
+        cond, body, (attempt, done, result, jnp.int32(0))
+    )
+    return result
+
+
+def contains(table: HashTable, hi, lo, valid=None):
+    return lookup(table, hi, lo, valid) != NOT_FOUND

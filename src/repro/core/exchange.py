@@ -1,0 +1,145 @@
+"""UC1 aggregated exchange: the paper's one-sided batched messaging on TPU.
+
+Every "Global Update-Only" phase in MetaHipMer (k-mer stores, link stores,
+gap projections) batches fine-grained inserts into per-destination buffers
+flushed with one-sided UPC puts.  The TPU-native equivalent is:
+
+    sort items by destination shard  ->  per-destination contiguous runs
+    scatter into a [P, capacity] send buffer (capacity-padded, like MoE)
+    one all_to_all                    ->  each shard holds what it owns
+
+This module is deliberately generic over payload pytrees: the assembly
+pipeline routes (k-mer key lanes, count, extension histograms) and the MoE
+layers route token activations through the *same* `route()` — the paper's
+communication pattern is literally the expert-dispatch pattern (DESIGN.md
+§4).  `capacity` plays the role of MoE's capacity factor; overflow is
+reported, not silently dropped.
+
+`fetch()` composes two `route()` calls into the paper's Use-case-3 remote
+lookup: route queries to owners, answer locally, route answers back.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RouteResult(NamedTuple):
+    payload: tuple          # received payload pytree, leading dim P*capacity
+    valid: jnp.ndarray      # [P*capacity] bool
+    src_shard: jnp.ndarray  # [P*capacity] int32 sender shard
+    src_index: jnp.ndarray  # [P*capacity] int32 index within sender's input
+    overflow: jnp.ndarray   # scalar int32 items dropped for capacity
+
+
+def _bucket(dest, valid, num_shards: int, capacity: int):
+    """Sorted bucket position of each item: (slot in [P*cap), kept?)."""
+    n = dest.shape[0]
+    d = jnp.where(valid, dest, num_shards)
+    sd, perm = jax.lax.sort((d.astype(jnp.int32), jnp.arange(n, dtype=jnp.int32)),
+                            num_keys=1)
+    first = jnp.concatenate([jnp.ones((1,), bool), sd[1:] != sd[:-1]])
+    # rank within the destination run
+    grp_start = jnp.zeros((n,), jnp.int32).at[
+        jnp.where(first, jnp.cumsum(first.astype(jnp.int32)) - 1, n)
+    ].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+    rank = jnp.arange(n, dtype=jnp.int32) - grp_start[seg]
+    keep = (sd < num_shards) & (rank < capacity)
+    slot = jnp.where(keep, sd * capacity + rank, num_shards * capacity)
+    overflow = ((sd < num_shards) & (rank >= capacity)).sum()
+    return perm, slot, keep, overflow
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_shards", "capacity", "axis_name")
+)
+def route(dest, payload, valid, *, num_shards: int, capacity: int,
+          axis_name: str | None = None) -> RouteResult:
+    """Send each item to shard dest[i]; receive what this shard owns.
+
+    Args (per-shard view when used inside shard_map):
+      dest:    [n] int32 destination shard ids.
+      payload: pytree of [n, ...] arrays.
+      valid:   [n] bool.
+    Returns RouteResult with leading dimension P*capacity: rows
+    [p*capacity, (p+1)*capacity) arrived from shard p.
+    """
+    n = dest.shape[0]
+    perm, slot, keep, overflow = _bucket(dest, valid, num_shards, capacity)
+    total = num_shards * capacity
+    axis_index = (
+        jax.lax.axis_index(axis_name) if axis_name is not None else jnp.int32(0)
+    )
+
+    def scatter(x):
+        xp = x[perm]
+        buf = jnp.zeros((total,) + x.shape[1:], x.dtype)
+        return buf.at[jnp.where(keep, slot, total)].set(xp, mode="drop")
+
+    bufs = jax.tree.map(scatter, payload)
+    vbuf = jnp.zeros((total,), bool).at[jnp.where(keep, slot, total)].set(
+        True, mode="drop"
+    )
+    sbuf = jnp.full((total,), axis_index, jnp.int32)
+    ibuf = jnp.zeros((total,), jnp.int32).at[
+        jnp.where(keep, slot, total)
+    ].set(perm, mode="drop")
+
+    if axis_name is not None:
+        a2a = lambda x: jax.lax.all_to_all(
+            x, axis_name, split_axis=0, concat_axis=0, tiled=True
+        )
+        bufs = jax.tree.map(a2a, bufs)
+        vbuf = a2a(vbuf)
+        sbuf = a2a(sbuf)
+        ibuf = a2a(ibuf)
+        overflow = jax.lax.psum(overflow, axis_name)
+    return RouteResult(
+        payload=bufs, valid=vbuf, src_shard=sbuf, src_index=ibuf,
+        overflow=overflow,
+    )
+
+
+def fetch(answer_fn, query_key, query_valid, *, num_shards: int,
+          capacity: int, axis_name: str | None, owner_of):
+    """UC3 remote lookup: route queries to owners, answer, route back.
+
+    Args:
+      answer_fn: (key_pytree, valid) -> answer pytree of [m, ...] arrays,
+        evaluated on the OWNER shard for the queries it received.
+      query_key: pytree of [n, ...] query keys.
+      query_valid: [n] bool.
+      owner_of: key_pytree -> [n] int32 owner shard.
+    Returns: answers aligned with the original queries ([n, ...] pytree)
+      plus a validity mask.
+    """
+    n = query_valid.shape[0]
+    dest = owner_of(query_key)
+    sent = route(dest, query_key, query_valid, num_shards=num_shards,
+                 capacity=capacity, axis_name=axis_name)
+    answers = answer_fn(sent.payload, sent.valid)
+    # route answers back to the senders
+    back = route(
+        sent.src_shard,
+        (answers, sent.src_index),
+        sent.valid,
+        num_shards=num_shards,
+        capacity=capacity,
+        axis_name=axis_name,
+    )
+    ans_back, idx_back = back.payload
+    # scatter answers into original positions
+
+    def unpermute(x):
+        out = jnp.zeros((n,) + x.shape[1:], x.dtype)
+        return out.at[jnp.where(back.valid, idx_back, n)].set(x, mode="drop")
+
+    result = jax.tree.map(unpermute, ans_back)
+    got = jnp.zeros((n,), bool).at[
+        jnp.where(back.valid, idx_back, n)
+    ].set(True, mode="drop")
+    return result, got

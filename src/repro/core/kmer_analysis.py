@@ -1,0 +1,253 @@
+"""K-mer analysis (paper §II-B): distributed histogram with extensions.
+
+UPC MetaHipMer routes raw k-mer occurrences to owner processors (UC1
+aggregated all-to-all) and counts them in local hash tables (UC4).  The
+TPU-idiomatic equivalent of a local counting hash table is radix sort +
+run-length segmentation: sort the packed canonical codes, find group
+boundaries, and segment-sum occurrence / extension histograms.  The sort
+IS the hash table — same asymptotic work, fully vectorized, and the
+receiving shard's "cache reuse after read localization" (§II-I) becomes a
+literal reduction in sort entropy.
+
+The MetaHipMer contribution lives in `compute_extensions`: the adaptive
+high-quality-extension threshold t_hq = max(t_base, e * depth) (§II-C)
+replaces HipMer's global constant, so high-coverage genomes tolerate
+proportionally more contradicting extensions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bloom, kmer
+from .types import EMPTY_HI, EXT_F, EXT_X, KmerSet, ReadSet
+
+
+class ExtensionPolicy(NamedTuple):
+    """MetaHipMer §II-C extension rule.
+
+    A side's extension is the most common base iff
+      (a) its count >= min_ext          (quality floor, HipMer t_hq role)
+      (b) contradicting occurrences <= max(t_base, err_rate * depth)
+    err_rate=0.0 recovers the HipMer fixed-threshold baseline.
+    """
+
+    min_ext: int = 2
+    t_base: float = 2.0
+    err_rate: float = 0.05
+
+
+def occurrences(reads: ReadSet, *, k: int):
+    """Flat canonical k-mer occurrences of a read batch.
+
+    Returns (hi, lo, left, right, valid), each [R * (L-k+1)].
+    """
+    hi, lo, valid, left, right = kmer.extract_kmers(reads.bases, reads.lengths, k=k)
+    chi, clo, cleft, cright, _ = kmer.canonicalize_occurrences(hi, lo, left, right, k=k)
+    flat = lambda x: x.reshape((-1,))
+    return flat(chi), flat(clo), flat(cleft), flat(cright), flat(valid)
+
+
+def _group_segments(shi, slo, sv):
+    """Boundary flags + segment ids of equal-key runs in sorted order."""
+    prev_ne = jnp.concatenate(
+        [jnp.ones((1,), bool), (shi[1:] != shi[:-1]) | (slo[1:] != slo[:-1])]
+    )
+    new_grp = sv & prev_ne
+    seg = jnp.cumsum(new_grp.astype(jnp.int32)) - 1
+    n_unique = jnp.where(jnp.any(sv), seg[-1] + jnp.any(sv).astype(jnp.int32), 0)
+    return new_grp, seg, n_unique
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def count_occurrences(hi, lo, left, right, valid, *, capacity: int):
+    """Sort-based exact counting of canonical k-mer occurrences.
+
+    Returns a dict of dense arrays of length `capacity`; live entries are
+    packed at the front in sorted key order.  `n_unique` may exceed
+    `capacity` — callers must check `overflow`.
+    """
+    # push invalids to the end of the sort order
+    shi = jnp.where(valid, hi, EMPTY_HI)
+    slo = jnp.where(valid, lo, jnp.uint32(0xFFFFFFFF))
+    shi, slo, sl, sr, sv = jax.lax.sort(
+        (shi, slo, left, right, valid.astype(jnp.uint8)), num_keys=2
+    )
+    sv = sv.astype(bool)
+    new_grp, seg, n_unique = _group_segments(shi, slo, sv)
+    # invalid rows scatter out of bounds (dropped)
+    seg_d = jnp.where(sv, seg, capacity)
+    counts = jnp.zeros((capacity,), jnp.int32).at[seg_d].add(1, mode="drop")
+    # extension histograms; ext >= 4 (absent) dropped
+    lseg = jnp.where(sv & (sl < 4), seg, capacity)
+    rseg = jnp.where(sv & (sr < 4), seg, capacity)
+    lcnt = jnp.zeros((capacity, 4), jnp.int32).at[lseg, sl.astype(jnp.int32) & 3].add(
+        1, mode="drop"
+    )
+    rcnt = jnp.zeros((capacity, 4), jnp.int32).at[rseg, sr.astype(jnp.int32) & 3].add(
+        1, mode="drop"
+    )
+    out_hi = jnp.full((capacity,), EMPTY_HI, jnp.uint32)
+    out_lo = jnp.zeros((capacity,), jnp.uint32)
+    bseg = jnp.where(new_grp, seg, capacity)
+    out_hi = out_hi.at[bseg].set(shi, mode="drop")
+    out_lo = out_lo.at[bseg].set(slo, mode="drop")
+    return {
+        "hi": out_hi,
+        "lo": out_lo,
+        "count": counts,
+        "left_cnt": lcnt,
+        "right_cnt": rcnt,
+        "n_unique": n_unique,
+        "overflow": n_unique > capacity,
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def aggregate_weighted(hi, lo, cnt, lcnt, rcnt, valid, *, capacity: int) -> dict:
+    """Sum weighted partial counts per key (sort + segment reduce).
+
+    The receiver half of the UC4 pattern: after the owner exchange, each
+    shard holds (key, partial count, partial histograms) tuples from every
+    sender and reduces them associatively.  Also the backbone of the
+    heavy-hitter pre-combining (§II-B) and of cross-iteration merging.
+    """
+    shi = jnp.where(valid, hi, EMPTY_HI)
+    slo = jnp.where(valid, lo, jnp.uint32(0xFFFFFFFF))
+    idx = jnp.arange(hi.shape[0], dtype=jnp.int32)
+    shi, slo, sv_u8, perm = jax.lax.sort(
+        (shi, slo, valid.astype(jnp.uint8), idx), num_keys=2
+    )
+    sv = sv_u8.astype(bool)
+    cnt, lcnt, rcnt = cnt[perm], lcnt[perm], rcnt[perm]
+    new_grp, seg, n_unique = _group_segments(shi, slo, sv)
+    seg_d = jnp.where(sv, seg, capacity)
+    counts = jnp.zeros((capacity,), jnp.int32).at[seg_d].add(cnt, mode="drop")
+    lout = jnp.zeros((capacity, 4), jnp.int32).at[seg_d].add(lcnt, mode="drop")
+    rout = jnp.zeros((capacity, 4), jnp.int32).at[seg_d].add(rcnt, mode="drop")
+    out_hi = jnp.full((capacity,), EMPTY_HI, jnp.uint32)
+    out_lo = jnp.zeros((capacity,), jnp.uint32)
+    bseg = jnp.where(new_grp, seg, capacity)
+    out_hi = out_hi.at[bseg].set(shi, mode="drop")
+    out_lo = out_lo.at[bseg].set(slo, mode="drop")
+    return {
+        "hi": out_hi,
+        "lo": out_lo,
+        "count": counts,
+        "left_cnt": lout,
+        "right_cnt": rout,
+        "n_unique": n_unique,
+        "overflow": n_unique > capacity,
+    }
+
+
+def merge_counts(a: dict, b: dict, *, capacity: int) -> dict:
+    """Union two count tables (same k), summing histograms (§II-H)."""
+    return aggregate_weighted(
+        jnp.concatenate([a["hi"], b["hi"]]),
+        jnp.concatenate([a["lo"], b["lo"]]),
+        jnp.concatenate([a["count"], b["count"]]),
+        jnp.concatenate([a["left_cnt"], b["left_cnt"]]),
+        jnp.concatenate([a["right_cnt"], b["right_cnt"]]),
+        jnp.concatenate([a["count"] > 0, b["count"] > 0]),
+        capacity=capacity,
+    )
+
+
+def compute_extensions(count, left_cnt, right_cnt, policy: ExtensionPolicy):
+    """EXT_* code per side under the MetaHipMer adaptive threshold."""
+    depth = count.astype(jnp.float32)
+    t_hq = jnp.maximum(policy.t_base, policy.err_rate * depth)
+
+    def side(cnt):
+        total = cnt.sum(axis=-1)
+        c1 = cnt.max(axis=-1)
+        b1 = cnt.argmax(axis=-1).astype(jnp.uint8)
+        contradict = (total - c1).astype(jnp.float32)
+        ok = (c1 >= policy.min_ext) & (contradict <= t_hq)
+        return jnp.where(total == 0, EXT_X, jnp.where(ok, b1, EXT_F)).astype(jnp.uint8)
+
+    return side(left_cnt), side(right_cnt)
+
+
+def _dup_in_chunk(hi, lo, valid):
+    """Flag the 2nd+ occurrence of each key within the chunk (exact, sorted)."""
+    shi = jnp.where(valid, hi, EMPTY_HI)
+    slo = jnp.where(valid, lo, jnp.uint32(0xFFFFFFFF))
+    idx = jnp.arange(hi.shape[0], dtype=jnp.int32)
+    o_hi, o_lo, o_idx = jax.lax.sort((shi, slo, idx), num_keys=2)
+    dup_sorted = jnp.concatenate(
+        [
+            jnp.zeros((1,), bool),
+            (o_hi[1:] == o_hi[:-1]) & (o_lo[1:] == o_lo[:-1]) & (o_hi[1:] != EMPTY_HI),
+        ]
+    )
+    return jnp.zeros(hi.shape, bool).at[o_idx].set(dup_sorted)
+
+
+def admit_two_sightings(hi, lo, valid, *, bloom_bits: int, num_chunks: int = 4):
+    """Paper's Bloom-filter two-pass admission (§II-B, HipMer [14]).
+
+    Pass 1 streams occurrence chunks through Bloom filter f1; an occurrence
+    whose key was already in f1 (or duplicated earlier in its own chunk)
+    marks the key as "seen twice" in a second filter f2.  Pass 2 admits
+    occurrences whose key is in f2.  No false negatives (every true >=2
+    k-mer is admitted); false positives let a few singletons through, which
+    the exact min_count filter downstream removes.
+    """
+    n = hi.shape[0]
+    chunk = -(-n // num_chunks)
+    f1 = bloom.empty(bloom_bits)
+    f2 = bloom.empty(bloom_bits)
+    for c in range(num_chunks):
+        sl = slice(c * chunk, min((c + 1) * chunk, n))
+        if sl.start >= n:
+            break
+        chi, clo, cv = hi[sl], lo[sl], valid[sl]
+        seen = bloom.query(f1, chi, clo) | _dup_in_chunk(chi, clo, cv)
+        f2 = bloom.insert(f2, chi, clo, cv & seen)
+        f1 = bloom.insert(f1, chi, clo, cv)
+    return valid & bloom.query(f2, hi, lo)
+
+
+def analyze(
+    reads: ReadSet,
+    *,
+    k: int,
+    capacity: int,
+    min_count: int = 2,
+    policy: ExtensionPolicy = ExtensionPolicy(),
+    low_memory: bool = False,
+    bloom_bits: int = 1 << 16,
+) -> KmerSet:
+    """Full single-shard k-mer analysis: occurrences -> counted KmerSet.
+
+    `low_memory=True` reproduces the paper's Bloom-filter pre-pass: only
+    k-mers sighted at least twice are admitted to counting, so `capacity`
+    can be provisioned for the true (multi-occurrence) k-mer population
+    rather than the error-singleton-dominated raw population.
+    """
+    hi, lo, left, right, valid = occurrences(reads, k=k)
+    if low_memory:
+        valid = admit_two_sightings(hi, lo, valid, bloom_bits=bloom_bits)
+    tab = count_occurrences(hi, lo, left, right, valid, capacity=capacity)
+    return finalize(tab, min_count=min_count, policy=policy)
+
+
+def finalize(tab: dict, *, min_count: int, policy: ExtensionPolicy) -> KmerSet:
+    """Apply the count floor and extension policy to a raw count table."""
+    used = tab["count"] >= min_count
+    lext, rext = compute_extensions(tab["count"], tab["left_cnt"], tab["right_cnt"], policy)
+    return KmerSet(
+        hi=tab["hi"],
+        lo=tab["lo"],
+        count=jnp.where(used, tab["count"], 0),
+        left_cnt=tab["left_cnt"],
+        right_cnt=tab["right_cnt"],
+        left_ext=jnp.where(used, lext, jnp.uint8(EXT_X)),
+        right_ext=jnp.where(used, rext, jnp.uint8(EXT_X)),
+        used=used,
+    )

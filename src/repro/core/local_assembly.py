@@ -1,0 +1,333 @@
+"""Local assembly by mer-walking (paper §II-G).
+
+Contigs are extended past their ends using only the reads localized to each
+contig (aligned there, or mates projected into the flanking gap).  Because
+the mer tables are keyed by (contig, mer), erroneous k-mers from
+high-coverage regions cannot contaminate low-depth loci — the paper's core
+argument for recovering k-mers that global analysis rejected.
+
+Mechanics preserved from the paper:
+  * dynamic mer-size ladder: upshift (+L) on fork, downshift (-L) on dead
+    end; terminate on fork-after-downshift / deadend-after-upshift;
+  * uncontested low-quality extensions are accepted (min_votes=1), unlike
+    the global extension policy.
+
+TPU adaptation: UPC work stealing balanced unpredictable per-walk costs
+across processors; here every walker advances in vectorized lockstep (one
+while_loop over all 2C contig ends), so imbalance dissolves into SIMD lane
+predication — the BSP analogue of stealing (DESIGN.md §2).  The
+(contig, mer) key is the mer code with the contig id embedded in the spare
+high bits of the dual-lane key (kmer.embed_tag), turning per-contig
+isolation into plain hash-table keying.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import dht, kmer
+from .types import ContigSet, ReadSet
+
+NONE = jnp.int32(-1)
+BUF_K = 31  # rolling suffix buffer width (max supported mer)
+
+# walk status codes
+ACTIVE, DEADEND, FORK, DONE = 0, 1, 2, 3
+
+
+class WalkTables(NamedTuple):
+    """One tagged-mer hash table per ladder rung.
+
+    NOTE: mer_sizes is deliberately NOT stored here — it must stay a static
+    (Python) value for the jitted walk, so it is threaded separately.
+    """
+
+    tables: tuple            # tuple[dht.HashTable]
+    right_hist: tuple        # tuple[[cap, 4] int32]
+    left_hist: tuple
+
+
+def localize_reads(reads: ReadSet, aln_contig):
+    """Read -> contig assignment: own alignment, else the mate's (§II-G)."""
+    own = aln_contig
+    mate = jnp.where(reads.mate >= 0, aln_contig[jnp.clip(reads.mate, 0)], NONE)
+    return jnp.where(own >= 0, own, mate)
+
+
+def _count_tagged(hi, lo, left, right, valid, tag, *, m: int, tag_bits: int,
+                  capacity: int):
+    """Canonicalize, tag, and histogram (contig,mer) occurrences into a DHT."""
+    chi, clo, cleft, cright, _ = kmer.canonicalize_occurrences(
+        hi, lo, left, right, k=m
+    )
+    thi, tlo = kmer.embed_tag(chi, clo, tag, k=m, tag_bits=tag_bits)
+    table, slots = dht.build(thi, tlo, valid, capacity=capacity)
+    cap = table.capacity
+    sel = jnp.where(valid & (slots >= 0), slots, cap)
+    lh = jnp.zeros((cap, 4), jnp.int32)
+    rh = jnp.zeros((cap, 4), jnp.int32)
+    lsel = jnp.where(valid & (slots >= 0) & (cleft < 4), slots, cap)
+    rsel = jnp.where(valid & (slots >= 0) & (cright < 4), slots, cap)
+    lh = lh.at[lsel, cleft.astype(jnp.int32) & 3].add(1, mode="drop")
+    rh = rh.at[rsel, cright.astype(jnp.int32) & 3].add(1, mode="drop")
+    return table, lh, rh
+
+
+def build_walk_tables(
+    reads: ReadSet,
+    read_contig,
+    *,
+    mer_sizes: tuple,
+    tag_bits: int,
+    capacity: int,
+) -> WalkTables:
+    tables, lhs, rhs = [], [], []
+    for m in mer_sizes:
+        hi, lo, valid, left, right = kmer.extract_kmers(
+            reads.bases, reads.lengths, k=m
+        )
+        W = hi.shape[1]
+        tag = jnp.broadcast_to(read_contig[:, None], (reads.num_reads, W))
+        v = valid & (read_contig[:, None] >= 0)
+        flat = lambda x: x.reshape((-1,))
+        t, lh, rh = _count_tagged(
+            flat(hi), flat(lo), flat(left), flat(right), flat(v),
+            flat(tag), m=m, tag_bits=tag_bits, capacity=capacity,
+        )
+        tables.append(t)
+        lhs.append(lh)
+        rhs.append(rh)
+    return WalkTables(
+        tables=tuple(tables), right_hist=tuple(rhs), left_hist=tuple(lhs)
+    )
+
+
+def _suffix_mer(buf_hi, buf_lo, m: int):
+    """Last m bases of the BUF_K-wide rolling buffer = low 2m bits."""
+    mask_lo, mask_hi = kmer._masks(m)
+    return buf_hi & mask_hi, buf_lo & mask_lo
+
+
+def _query_rung(wt: WalkTables, rung: int, m: int, buf_hi, buf_lo, contig, *,
+                tag_bits: int, active):
+    """Right-extension histogram for the current suffix mer on one rung."""
+    mhi, mlo = _suffix_mer(buf_hi, buf_lo, m)
+    chi, clo, flip = kmer.canonical(mhi, mlo, k=m)
+    thi, tlo = kmer.embed_tag(chi, clo, contig, k=m, tag_bits=tag_bits)
+    slots = dht.lookup(wt.tables[rung], thi, tlo, active)
+    ok = slots >= 0
+    s = jnp.clip(slots, 0)
+    rh = wt.right_hist[rung][s]
+    lh = wt.left_hist[rung][s]
+    # reading frame: if the canonical form is the RC, "right" in walk frame
+    # is the complemented LEFT histogram of the stored form
+    hist = jnp.where(flip[:, None], lh[:, ::-1], rh)
+    return jnp.where(ok[:, None] & active[:, None], hist, 0)
+
+
+class WalkResult(NamedTuple):
+    ext_bases: jnp.ndarray   # [E, max_ext] uint8 accepted bases (4 pad)
+    ext_len: jnp.ndarray     # [E] int32
+    status: jnp.ndarray      # [E] final status code
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mer_sizes", "tag_bits", "max_ext", "min_votes", "dominance"),
+)
+def mer_walk(
+    wt: WalkTables,
+    start_hi,
+    start_lo,
+    contig,
+    active0,
+    *,
+    mer_sizes: tuple,
+    tag_bits: int,
+    max_ext: int = 64,
+    min_votes: int = 1,
+    dominance: int = 4,
+) -> WalkResult:
+    """Vectorized dynamic-mer walk for E walkers (2 per contig).
+
+    start_hi/lo: BUF_K-wide packed suffix of each walker's contig end,
+    oriented so the walk appends rightward.
+    """
+    E = start_hi.shape[0]
+    n_rungs = len(mer_sizes)
+    mid_rung = n_rungs // 2
+
+    def choose(hist):
+        """(base, kind): kind 0=accept, 1=deadend, 2=fork."""
+        c1 = hist.max(axis=-1)
+        b1 = hist.argmax(axis=-1).astype(jnp.uint8)
+        viable = (hist >= min_votes).sum(axis=-1)
+        total = hist.sum(axis=-1)
+        second = total - c1  # mass off the argmax
+        uncontested = (viable == 1) & (c1 >= min_votes)
+        dominated = (viable > 1) & (c1 >= dominance * jnp.maximum(second, 1)) & (
+            c1 >= min_votes + 1
+        )
+        accept = uncontested | dominated
+        deadend = viable == 0
+        kind = jnp.where(accept, 0, jnp.where(deadend, 1, 2))
+        return b1, kind
+
+    def cond(state):
+        _, _, _, _, status, steps, _, _ = state
+        return jnp.any(status == ACTIVE) & (steps < max_ext)
+
+    def body(state):
+        buf_hi, buf_lo, rung, last_shift, status, steps, out, out_len = state
+        act = status == ACTIVE
+        # query every rung, select the walker's current rung
+        hists = jnp.stack(
+            [
+                _query_rung(wt, r, mer_sizes[r], buf_hi, buf_lo, contig,
+                            tag_bits=tag_bits, active=act)
+                for r in range(n_rungs)
+            ],
+            axis=1,
+        )  # [E, n_rungs, 4]
+        hist = jnp.take_along_axis(
+            hists, rung[:, None, None].astype(jnp.int32), axis=1
+        )[:, 0]
+        base, kind = choose(hist)
+        # ladder transitions (paper §II-G):
+        #   fork    -> upshift; at top, or right after a downshift: stop FORK
+        #   deadend -> downshift; at bottom, or right after an upshift: DEADEND
+        at_top = rung == n_rungs - 1
+        at_bottom = rung == 0
+        stop_fork = act & (kind == 2) & (at_top | (last_shift == -1))
+        stop_dead = act & (kind == 1) & (at_bottom | (last_shift == +1))
+        upshift = act & (kind == 2) & ~stop_fork
+        downshift = act & (kind == 1) & ~stop_dead
+        accept = act & (kind == 0)
+        new_rung = jnp.clip(rung + upshift.astype(jnp.int32)
+                            - downshift.astype(jnp.int32), 0, n_rungs - 1)
+        new_shift = jnp.where(
+            upshift, 1, jnp.where(downshift, -1, jnp.where(accept, 0, last_shift))
+        )
+        nhi, nlo = kmer.append_base(buf_hi, buf_lo, base, k=BUF_K)
+        buf_hi = jnp.where(accept, nhi, buf_hi)
+        buf_lo = jnp.where(accept, nlo, buf_lo)
+        out = out.at[jnp.arange(E), jnp.clip(out_len, 0, max_ext - 1)].set(
+            jnp.where(accept, base, out[jnp.arange(E), jnp.clip(out_len, 0, max_ext - 1)])
+        )
+        out_len = out_len + accept.astype(jnp.int32)
+        status = jnp.where(stop_fork, FORK, jnp.where(stop_dead, DEADEND, status))
+        return buf_hi, buf_lo, new_rung, new_shift, status, steps + 1, out, out_len
+
+    init = (
+        start_hi,
+        start_lo,
+        jnp.full((E,), mid_rung, jnp.int32),
+        jnp.zeros((E,), jnp.int32),
+        jnp.where(active0, ACTIVE, DONE),
+        jnp.int32(0),
+        jnp.full((E, max_ext), 4, jnp.uint8),
+        jnp.zeros((E,), jnp.int32),
+    )
+    buf_hi, buf_lo, rung, last_shift, status, steps, out, out_len = (
+        jax.lax.while_loop(cond, body, init)
+    )
+    return WalkResult(ext_bases=out, ext_len=out_len, status=status)
+
+
+def contig_end_buffers(contigs: ContigSet, alive):
+    """BUF_K-wide packed suffix per contig end, oriented to extend rightward.
+
+    End 0 (left): the RC of the contig prefix; end 1 (right): the suffix.
+    Short contigs (< BUF_K) pad with leading A's — harmless because suffix
+    mers never reach past the real bases for m <= contig length, and walks
+    on contigs shorter than the smallest rung are disabled by the caller.
+    """
+    C, Lmax = contigs.bases.shape
+    idx = jnp.arange(BUF_K, dtype=jnp.int32)[None, :]
+    L = contigs.lengths[:, None]
+    # suffix: last BUF_K bases (clamped)
+    suf_pos = jnp.clip(L - BUF_K + idx, 0, Lmax - 1)
+    suffix = jnp.take_along_axis(contigs.bases, suf_pos, axis=1)
+    suffix = jnp.where(suffix > 3, 0, suffix)  # pad -> A
+    s_hi, s_lo = kmer.pack_window(suffix, k=BUF_K)
+    # prefix RC'd: first BUF_K bases, reverse-complemented
+    pre_pos = jnp.clip(idx, 0, Lmax - 1)
+    prefix = jnp.take_along_axis(contigs.bases, pre_pos, axis=1)
+    prefix = jnp.where(prefix > 3, 0, prefix)
+    p_hi, p_lo = kmer.pack_window(prefix, k=BUF_K)
+    rp_hi, rp_lo = kmer.reverse_complement(p_hi, p_lo, k=BUF_K)
+    return (
+        jnp.concatenate([rp_hi, s_hi]),
+        jnp.concatenate([rp_lo, s_lo]),
+        jnp.concatenate([alive, alive]),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def apply_extensions(contigs: ContigSet, alive, walk: WalkResult):
+    """Graft the walked bases onto the contigs (left end RC'd back)."""
+    C, Lmax = contigs.bases.shape
+    max_ext = walk.ext_bases.shape[1]
+    lext = walk.ext_bases[:C]      # left walks (in RC frame)
+    rext = walk.ext_bases[C:]
+    nL = jnp.where(alive, walk.ext_len[:C], 0)
+    nR = jnp.where(alive, walk.ext_len[C:], 0)
+    L = contigs.lengths
+    new_len = jnp.minimum(L + nL + nR, Lmax)
+    i = jnp.arange(Lmax, dtype=jnp.int32)[None, :]
+    # zone 1: prepended bases = complement(lext[nL-1-i])
+    lidx = jnp.clip(nL[:, None] - 1 - i, 0, max_ext - 1)
+    z1 = kmer.complement_base(jnp.take_along_axis(lext, lidx, axis=1))
+    # zone 2: original bases shifted right by nL
+    oidx = jnp.clip(i - nL[:, None], 0, Lmax - 1)
+    z2 = jnp.take_along_axis(contigs.bases, oidx, axis=1)
+    # zone 3: appended bases
+    ridx = jnp.clip(i - nL[:, None] - L[:, None], 0, max_ext - 1)
+    z3 = jnp.take_along_axis(rext, ridx, axis=1)
+    out = jnp.where(
+        i < nL[:, None],
+        z1,
+        jnp.where(i < (nL + L)[:, None], z2, jnp.where(i < new_len[:, None], z3, 4)),
+    ).astype(jnp.uint8)
+    out = jnp.where(alive[:, None], out, contigs.bases)
+    new_len = jnp.where(alive, new_len, contigs.lengths)
+    return ContigSet(bases=out, lengths=new_len, depths=contigs.depths)
+
+
+def extend_contigs(
+    reads: ReadSet,
+    contigs: ContigSet,
+    alive,
+    aln_contig,
+    *,
+    mer_sizes: tuple = (17, 21, 25),
+    capacity: int = 1 << 16,
+    max_ext: int = 64,
+    min_len: int | None = None,
+):
+    """Full §II-G stage: localize -> tables -> walk both ends -> graft."""
+    C = contigs.capacity
+    tag_bits = min(16, 62 - 2 * max(mer_sizes))
+    assert C <= (1 << tag_bits), (
+        f"contig capacity {C} exceeds tag space {1 << tag_bits}"
+    )
+    read_contig = localize_reads(reads, aln_contig)
+    wt = build_walk_tables(
+        reads, read_contig, mer_sizes=mer_sizes, tag_bits=tag_bits,
+        capacity=capacity,
+    )
+    bhi, blo, act = contig_end_buffers(contigs, alive)
+    min_len = min_len if min_len is not None else max(mer_sizes)
+    long_enough = contigs.lengths >= min_len
+    act = act & jnp.concatenate([long_enough, long_enough])
+    walker_contig = jnp.concatenate(
+        [jnp.arange(C, dtype=jnp.int32), jnp.arange(C, dtype=jnp.int32)]
+    )
+    walk = mer_walk(
+        wt, bhi, blo, walker_contig, act, mer_sizes=tuple(mer_sizes),
+        tag_bits=tag_bits, max_ext=max_ext,
+    )
+    return apply_extensions(contigs, alive, walk), walk

@@ -1,0 +1,89 @@
+"""Iterative graph pruning (paper Algorithm 2, §II-E).
+
+Branches whose depth disagrees with their neighborhood are likely built
+from erroneous edges.  The depth cutoff tau rises geometrically
+(tau *= 1+alpha); a contig is pruned when it is short (<= 2k) and its depth
+is <= min(tau, beta * neighbors-depth).
+
+Parallel structure preserved from the paper: each round every shard prunes
+its contigs, refreshes the neighborhoods (some neighbors vanished), and the
+rounds end when tau passes the maximum contig depth OR an all-reduce over
+per-shard pruned flags (max) reports a converged (no-change) state.  The
+`pruned_any_reduce` hook is where the distributed runtime plugs jax.lax's
+psum/pmax (see dist/pipeline.py); the default is the single-shard identity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PruneResult(NamedTuple):
+    alive: jnp.ndarray     # [C] bool
+    rounds: jnp.ndarray    # scalar int32 rounds executed
+    pruned: jnp.ndarray    # scalar int32 contigs removed
+
+
+def neighbor_depth(depths, alive, ends_nbr, num_kmers: int):
+    """Max depth among alive contigs sharing a fork vertex with each contig.
+
+    Includes the contig itself, which is conservative-safe for beta < 1:
+    a contig that is the deepest on all its forks can never satisfy
+    depth <= beta * neighbors-depth.
+    """
+    C = depths.shape[0]
+    flat = ends_nbr.reshape((C, 8))
+    live_depth = jnp.where(alive, depths, 0.0)
+    fork_max = jnp.zeros((num_kmers,), jnp.float32)
+    sel = jnp.where(alive[:, None] & (flat >= 0), flat, num_kmers)
+    fork_max = fork_max.at[sel.reshape(-1)].max(
+        jnp.repeat(live_depth, 8), mode="drop"
+    )
+    gathered = jnp.where(flat >= 0, fork_max[jnp.clip(flat, 0)], 0.0)
+    return gathered.max(axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "num_kmers"))
+def prune(
+    lengths,
+    depths,
+    ends_nbr,
+    alive_in,
+    *,
+    k: int,
+    num_kmers: int,
+    alpha: float = 0.25,
+    beta: float = 0.5,
+    pruned_any_reduce: Callable = lambda x: x,
+) -> PruneResult:
+    alive0 = alive_in & (lengths > 0)
+    max_depth = jnp.max(jnp.where(alive0, depths, 0.0))
+    short = lengths <= 2 * k
+
+    def cond(state):
+        alive, tau, rounds, converged, _ = state
+        return (tau < max_depth) & ~converged
+
+    def body(state):
+        alive, tau, rounds, _, removed = state
+        nbr = neighbor_depth(depths, alive, ends_nbr, num_kmers)
+        cut = jnp.minimum(tau, beta * nbr)
+        prune_now = alive & short & (depths <= cut)
+        pruned_any = pruned_any_reduce(jnp.any(prune_now))
+        # paper's convergence detection: all-reduce(max) over shard flags.
+        # Sound early exit: once tau > beta*max_depth every cutoff is
+        # neighbor-limited, so a no-change round is a true fixed point.
+        converged = ~pruned_any & (tau > beta * max_depth)
+        alive = alive & ~prune_now
+        removed = removed + prune_now.sum()
+        return alive, tau * (1.0 + alpha), rounds + 1, converged, removed
+
+    alive, tau, rounds, _, removed = jax.lax.while_loop(
+        cond,
+        body,
+        (alive0, jnp.float32(1.0), jnp.int32(0), jnp.array(False), jnp.int32(0)),
+    )
+    return PruneResult(alive=alive, rounds=rounds, pruned=removed)

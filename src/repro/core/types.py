@@ -1,0 +1,118 @@
+"""Shared dataclasses / conventions for the assembly pipeline.
+
+Base encoding convention (uniform across the repo):
+  A=0, C=1, G=2, T=3, 4 = N / invalid / pad.
+
+K-mer packing convention:
+  k <= 31 bases, 2 bits each, MSB-first (first base in the highest bits of
+  the 62-bit code).  TPUs have no fast 64-bit integer path, so codes are a
+  dual-lane (hi, lo) pair of uint32:  code = hi * 2**32 + lo, bits 62..63
+  always zero.  The all-ones pattern in `hi` is therefore free to act as an
+  EMPTY sentinel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# Base codes.
+A, C, G, T = 0, 1, 2, 3
+INVALID_BASE = 4  # N / pad
+
+# Extension codes (per side of a k-mer).
+EXT_A, EXT_C, EXT_G, EXT_T = 0, 1, 2, 3
+EXT_F = 4  # fork: multiple candidate extensions survive the threshold
+EXT_X = 5  # no extension observed (dead end)
+
+# Sentinel for "no index" in int32 pointer arrays.
+NONE_IDX = jnp.int32(-1)
+
+EMPTY_HI = jnp.uint32(0xFFFFFFFF)  # hi-lane sentinel for empty hash slots
+
+BASE_CHARS = "ACGTN"
+COMP = jnp.array([3, 2, 1, 0, 4], dtype=jnp.uint8)  # A<->T, C<->G, N->N
+
+
+class ReadSet(NamedTuple):
+    """A batch of (possibly paired) reads, dense [R, L] layout.
+
+    bases:   [R, L] uint8 codes (4 = pad past `lengths`).
+    lengths: [R] int32 actual read lengths.
+    mate:    [R] int32 index of the mate read, -1 if unpaired.  Mates are
+             stored in the standard fr orientation (mate is the reverse
+             strand end of the fragment).
+    insert_size: scalar int32 library insert size (fragment length).
+    """
+
+    bases: jnp.ndarray
+    lengths: jnp.ndarray
+    mate: jnp.ndarray
+    insert_size: int
+
+    @property
+    def num_reads(self) -> int:
+        return self.bases.shape[0]
+
+    @property
+    def max_len(self) -> int:
+        return self.bases.shape[1]
+
+
+class ContigSet(NamedTuple):
+    """Dense contig storage.
+
+    bases:   [C, Lmax] uint8 (4 past length)
+    lengths: [C] int32 (0 = dead/empty slot)
+    depths:  [C] float32 mean k-mer depth
+    """
+
+    bases: jnp.ndarray
+    lengths: jnp.ndarray
+    depths: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        return self.bases.shape[0]
+
+    @property
+    def max_len(self) -> int:
+        return self.bases.shape[1]
+
+
+class KmerSet(NamedTuple):
+    """Counted canonical k-mers with per-side extension statistics.
+
+    All arrays have length `capacity`; the first `n` (= sum(used)) slots are
+    live.  `left_ext` / `right_ext` are EXT_* codes computed from the
+    extension histograms under the MetaHipMer adaptive threshold.
+    """
+
+    hi: jnp.ndarray          # [cap] uint32
+    lo: jnp.ndarray          # [cap] uint32
+    count: jnp.ndarray       # [cap] int32 occurrence count
+    left_cnt: jnp.ndarray    # [cap, 4] int32 per-base left-extension counts
+    right_cnt: jnp.ndarray   # [cap, 4] int32
+    left_ext: jnp.ndarray    # [cap] uint8 EXT_* code
+    right_ext: jnp.ndarray   # [cap] uint8
+    used: jnp.ndarray        # [cap] bool
+
+    @property
+    def capacity(self) -> int:
+        return self.hi.shape[0]
+
+
+def bases_to_str(bases, length=None) -> str:
+    import numpy as np
+
+    arr = np.asarray(bases)
+    if length is not None:
+        arr = arr[: int(length)]
+    return "".join(BASE_CHARS[int(b)] for b in arr)
+
+
+def str_to_bases(s: str) -> jnp.ndarray:
+    import numpy as np
+
+    lut = {c: i for i, c in enumerate(BASE_CHARS)}
+    return jnp.asarray(np.array([lut.get(c, 4) for c in s.upper()], dtype=np.uint8))

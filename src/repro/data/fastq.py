@@ -1,0 +1,80 @@
+"""FASTQ-ish read I/O + quality trimming (BB-tools stand-in, §IV-A).
+
+The paper preprocesses with BBTools (adapter trimming, contaminant
+removal); this module provides the equivalent ingest path for the
+pipeline: parse FASTQ text, quality-trim 3' ends, drop short reads, and
+pack into the dense ReadSet layout.  Paired files interleave as
+(r1, r2, r1, r2, ...) matching mgsim's mate convention.
+"""
+from __future__ import annotations
+
+import io
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.types import ReadSet
+
+_CODE = np.full(256, 4, np.uint8)
+for i, c in enumerate("ACGT"):
+    _CODE[ord(c)] = i
+    _CODE[ord(c.lower())] = i
+
+
+def parse_fastq(text: str):
+    """-> list of (seq_codes uint8[:], quals uint8[:])."""
+    out = []
+    lines = [l.strip() for l in io.StringIO(text) if l.strip()]
+    for i in range(0, len(lines) - 3, 4):
+        assert lines[i].startswith("@"), f"bad record at line {i}"
+        seq = np.frombuffer(lines[i + 1].encode(), np.uint8)
+        qual = np.frombuffer(lines[i + 3].encode(), np.uint8) - 33
+        out.append((_CODE[seq], qual.astype(np.uint8)))
+    return out
+
+
+def quality_trim(seq, qual, min_q: int = 10):
+    """Trim the 3' tail after the first position where the running quality
+    drops below min_q (simple Mott-like rule)."""
+    bad = qual < min_q
+    if bad.any():
+        cut = int(np.argmax(bad))
+        return seq[:cut], qual[:cut]
+    return seq, qual
+
+
+def to_readset(records, *, max_len: int | None = None, min_len: int = 32,
+               insert_size: int = 200, trim_q: int = 10,
+               paired: bool = True) -> ReadSet:
+    trimmed = [quality_trim(s, q, trim_q) for s, q in records]
+    if paired and len(trimmed) % 2:
+        trimmed = trimmed[:-1]
+    L = max_len or max((len(s) for s, _ in trimmed), default=32)
+    R = len(trimmed)
+    bases = np.full((R, L), 4, np.uint8)
+    lengths = np.zeros((R,), np.int32)
+    for i, (s, _) in enumerate(trimmed):
+        s = s[:L]
+        if len(s) >= min_len:
+            bases[i, : len(s)] = s
+            lengths[i] = len(s)
+    if paired:
+        mate = (np.arange(R, dtype=np.int32) ^ 1)
+    else:
+        mate = np.full((R,), -1, np.int32)
+    return ReadSet(
+        bases=jnp.asarray(bases),
+        lengths=jnp.asarray(lengths),
+        mate=jnp.asarray(mate),
+        insert_size=insert_size,
+    )
+
+
+def write_fasta(seqs, names=None) -> str:
+    """Render assembled pieces as FASTA text."""
+    out = []
+    for i, s in enumerate(seqs):
+        name = names[i] if names else f"scaffold_{i}"
+        out.append(f">{name}")
+        out.append("".join("ACGTN"[int(b)] for b in np.asarray(s)))
+    return "\n".join(out) + "\n"

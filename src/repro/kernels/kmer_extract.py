@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: fused k-mer extraction + canonicalization + hashing.
+
+K-mer analysis touches every input byte and dominates the paper's
+weak-scaling profile (§IV-C Table II): for each read window it must
+2-bit-pack the k bases, compute the reverse complement, take the
+lexicographic min (canonical form), and hash it for owner routing.  Done
+naively, the intermediates ([R, W] packed codes, RC codes, flip masks) round
+-trip through HBM between ops.  This kernel keeps the whole rolling
+pipeline in VMEM/VREGs: one pass over a [BR, L] read tile produces the
+canonical (hi, lo) lanes, the owner hash, and the validity mask, all
+blocked to the same [BR, L] tile so reads stream through HBM exactly once.
+
+Integer-only VPU work: the dual-lane uint32 packing (DESIGN.md §2) exists
+precisely because this kernel targets the 32-bit VPU datapath — a uint64
+rolling code would serialize on TPU.
+
+Layout: grid over read-block rows; BlockSpec tiles [BLOCK_READS, L] with
+outputs padded to L columns (the last k-1 columns are masked invalid) so
+every ref shares one tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_READS = 8
+
+
+def _mix32(x):
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _rev32_2bit(x):
+    x = ((x & jnp.uint32(0x33333333)) << 2) | ((x >> 2) & jnp.uint32(0x33333333))
+    x = ((x & jnp.uint32(0x0F0F0F0F)) << 4) | ((x >> 4) & jnp.uint32(0x0F0F0F0F))
+    x = ((x & jnp.uint32(0x00FF00FF)) << 8) | ((x >> 8) & jnp.uint32(0x00FF00FF))
+    return (x << 16) | (x >> 16)
+
+
+def _kernel(bases_ref, lengths_ref, hi_ref, lo_ref, hash_ref, valid_ref, *, k: int):
+    b = bases_ref[...]  # [BR, L] uint8
+    lengths = lengths_ref[...]  # [BR]
+    BR, L = b.shape
+    W = L - k + 1
+    bi = b.astype(jnp.uint32)
+    # rolling 2-bit pack, MSB-first, over the k static steps
+    bits = 2 * k
+    mask_lo = jnp.uint32(0xFFFFFFFF if bits >= 32 else (1 << bits) - 1)
+    mask_hi = jnp.uint32((1 << (bits - 32)) - 1 if bits > 32 else 0)
+    hi = jnp.zeros((BR, W), jnp.uint32)
+    lo = jnp.zeros((BR, W), jnp.uint32)
+    for i in range(k):
+        nb = bi[:, i : i + W] & 3
+        hi = ((hi << 2) | (lo >> 30)) & mask_hi
+        lo = ((lo << 2) | nb) & mask_lo
+    # reverse complement (dual-lane, static shifts)
+    clo = (~lo) & mask_lo
+    if k <= 16:
+        r = _rev32_2bit(clo)
+        rlo = r >> (32 - bits) if k < 16 else r
+        rhi = jnp.zeros_like(hi)
+    else:
+        chi = (~hi) & mask_hi
+        rhi64 = _rev32_2bit(clo)
+        rlo64 = _rev32_2bit(chi)
+        s = 64 - bits
+        if s == 0:
+            rhi, rlo = rhi64, rlo64
+        elif s >= 32:
+            rhi, rlo = jnp.zeros_like(hi), rhi64 >> (s - 32)
+        else:
+            rhi = rhi64 >> s
+            rlo = (rlo64 >> s) | (rhi64 << (32 - s))
+    # canonical = lexicographic min of (hi,lo) and (rhi,rlo)
+    flip = (rhi < hi) | ((rhi == hi) & (rlo < lo))
+    c_hi = jnp.where(flip, rhi, hi)
+    c_lo = jnp.where(flip, rlo, lo)
+    h = _mix32(c_hi ^ _mix32(c_lo ^ jnp.uint32(0x9E3779B9)))
+    # validity: window inside read, no N bases
+    inv = (b >= 4).astype(jnp.int32)
+    csum = jnp.concatenate([jnp.zeros((BR, 1), jnp.int32), jnp.cumsum(inv, axis=1)], axis=1)
+    no_n = (csum[:, k : k + W] - csum[:, :W]) == 0
+    pos = jax.lax.broadcasted_iota(jnp.int32, (BR, W), 1)
+    valid = no_n & (pos + k <= lengths[:, None])
+    # pad W -> L so outputs share the input tile shape
+    pad = ((0, 0), (0, k - 1))
+    hi_ref[...] = jnp.pad(c_hi, pad)
+    lo_ref[...] = jnp.pad(c_lo, pad)
+    hash_ref[...] = jnp.pad(h, pad)
+    valid_ref[...] = jnp.pad(valid, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "block_reads"))
+def kmer_extract(
+    bases, lengths, *, k: int, interpret: bool = True, block_reads: int = BLOCK_READS
+):
+    """Canonical k-mer codes + owner hash for a dense read batch.
+
+    Args:
+      bases:   [R, L] uint8 (R divisible by block_reads).
+      lengths: [R] int32.
+    Returns:
+      (hi, lo, hash, valid), each [R, L] with the last k-1 columns invalid.
+    """
+    R, L = bases.shape
+    assert R % block_reads == 0, f"R={R} not divisible by {block_reads}"
+    grid = (R // block_reads,)
+    out_shape = [
+        jax.ShapeDtypeStruct((R, L), jnp.uint32),
+        jax.ShapeDtypeStruct((R, L), jnp.uint32),
+        jax.ShapeDtypeStruct((R, L), jnp.uint32),
+        jax.ShapeDtypeStruct((R, L), jnp.bool_),
+    ]
+    tile = lambda: pl.BlockSpec((block_reads, L), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_reads, L), lambda i: (i, 0)),
+            pl.BlockSpec((block_reads,), lambda i: (i,)),
+        ],
+        out_specs=[tile(), tile(), tile(), tile()],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(bases, lengths)

@@ -1,0 +1,47 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Each op dispatches to the Pallas kernel (interpret=True on CPU — the
+container has no TPU; the kernel body still executes exactly) and exposes
+the pure-jnp oracle alongside for validation and fallback.  On a real TPU
+runtime `interpret` flips to False with no other change.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import flash_attention as _fa
+from . import kmer_extract as _ke
+from . import ref
+from . import ssd_scan as _ssd
+from . import sw_extend as _sw
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def kmer_extract(bases, lengths, *, k: int, use_kernel: bool = True):
+    if use_kernel:
+        return _ke.kmer_extract(bases, lengths, k=k, interpret=_interpret())
+    return ref.kmer_extract_ref(bases, lengths, k=k)
+
+
+def sw_extend(query, target, qlen, tlen, *, band: int = 15, use_kernel: bool = True,
+              **kw):
+    if use_kernel:
+        return _sw.sw_extend(query, target, qlen, tlen, band=band,
+                             interpret=_interpret(), **kw)
+    return ref.sw_extend_ref(query, target, qlen, tlen, band=band, **kw)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, use_kernel: bool = True, **kw):
+    if use_kernel:
+        return _fa.flash_attention(q, k, v, causal=causal,
+                                   interpret=_interpret(), **kw)
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def ssd_scan(x, a, b, c, *, chunk: int = 128, use_kernel: bool = True):
+    if use_kernel:
+        return _ssd.ssd_scan(x, a, b, c, chunk=chunk, interpret=_interpret())
+    return ref.ssd_scan_ref(x, a, b, c)

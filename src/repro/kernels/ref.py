@@ -1,0 +1,137 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` mirrors its kernel's exact interface (including output padding
+conventions) using only jax.numpy and the already-tested core codecs, so
+kernel tests can assert_allclose against an independent implementation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmer
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def kmer_extract_ref(bases, lengths, *, k: int):
+    """Oracle for kernels.kmer_extract (padded to [R, L])."""
+    R, L = bases.shape
+    hi, lo, valid, _, _ = kmer.extract_kmers(bases, lengths, k=k)
+    chi, clo, _ = kmer.canonical(hi, lo, k=k)
+    h = kmer.kmer_hash(chi, clo)
+    pad = ((0, 0), (0, k - 1))
+    return (
+        jnp.pad(chi, pad),
+        jnp.pad(clo, pad),
+        jnp.pad(h, pad),
+        jnp.pad(valid, pad),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("band", "match", "mismatch", "gap"))
+def sw_extend_ref(query, target, qlen, tlen, *, band: int = 15,
+                  match: int = 1, mismatch: int = -1, gap: int = -1):
+    """Oracle for kernels.sw_extend: banded semi-global extension DP.
+
+    Dense [QL+1, TL+1] DP (no banding shortcuts beyond masking), so the
+    banded kernel must match it wherever the optimum stays inside the band.
+    Returns (best_score, best_qpos, best_tpos) per batch row; positions are
+    1-based DP indices (0 = empty prefix).
+    """
+    B, QL = query.shape
+    TL = target.shape[1]
+    NEGINF = jnp.int32(-(1 << 20))
+
+    def per_row(q, t, ql, tl):
+        row0 = jnp.where(
+            jnp.arange(TL + 1) <= tl, jnp.arange(TL + 1, dtype=jnp.int32) * gap, NEGINF
+        )
+        # force band on row 0 as well: |0 - j| <= band
+        row0 = jnp.where(jnp.arange(TL + 1) <= band, row0, NEGINF)
+
+        def body(carry, i):
+            prev, best, bq, bt = carry
+            ii = i + 1
+            sub = jnp.where(
+                (q[i] == t) & (q[i] < 4), match, mismatch
+            )  # [TL] score vs each target pos
+            diag = prev[:-1] + sub
+            up = prev[1:] + gap
+            cand = jnp.maximum(diag, up)
+            first = jnp.where(ii <= band, ii * gap, NEGINF)
+            # left dependency: max-plus prefix scan
+            def scan_fn(c, x):
+                v = jnp.maximum(x, c + gap)
+                return v, v
+
+            _, row_rest = jax.lax.scan(scan_fn, first, cand)
+            row = jnp.concatenate([first[None], row_rest])
+            j = jnp.arange(TL + 1)
+            in_band = jnp.abs(ii - j) <= band
+            valid = (ii <= ql) & (j <= tl) & in_band
+            row = jnp.where(valid, row, NEGINF)
+            better = (row > best) & valid
+            best2 = jnp.max(jnp.where(valid, row, NEGINF))
+            argj = jnp.argmax(jnp.where(valid, row, NEGINF))
+            upd = best2 > best
+            return (
+                row,
+                jnp.where(upd, best2, best),
+                jnp.where(upd, ii, bq),
+                jnp.where(upd, argj.astype(jnp.int32), bt),
+            ), None
+
+        init = (row0, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        (row, best, bq, bt), _ = jax.lax.scan(body, init, jnp.arange(QL))
+        return best, bq, bt
+
+    return jax.vmap(per_row)(query, target, qlen, tlen)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """Oracle for kernels.flash_attention: plain softmax attention.
+
+    q,k,v: [B, H, S, D] (k/v may have fewer heads: GQA broadcast).
+    """
+    B, H, S, D = q.shape
+    KH = k.shape[1]
+    if KH != H:
+        rep = H // KH
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, a, b, c):
+    """Oracle for kernels.ssd_scan (Mamba-2 SSD, scalar-identity A).
+
+    x: [B, S, H, P] inputs; a: [B, S, H] decay logits (A = exp(a) in (0,1));
+    b, c: [B, S, H, N] input/output projections.  State: [H, P, N].
+    y[t] = c[t] . state[t], state[t] = A[t] * state[t-1] + x[t] b[t]^T.
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+
+    def step(state, inp):
+        xt, at, bt, ct = inp
+        state = state * at[:, :, None, None] + xt[:, :, :, None] * bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(jnp.exp(a), 1, 0).astype(jnp.float32),
+        jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(c, 1, 0).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # [B, S, H, P]

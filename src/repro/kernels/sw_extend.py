@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: banded Smith-Waterman seed extension (merAligner).
+
+merAligner's extend phase (paper §II-F, [20]) scores read-vs-contig
+alignments out from each seed hit.  The GPU/CPU formulation walks
+anti-diagonals; on TPU we use the row-wavefront form whose only serial
+dependency — the in-row gap chain — is resolved with a log2(band)-round
+max-plus shift-scan, keeping the whole band in VREGs:
+
+  for i in rows:                         # lax.fori_loop
+    diag/up from the previous row        # vector ops on [B, band]
+    left-gap chain: band-wide max-plus prefix scan (log rounds)
+
+The band is stored target-relative (j in [i-band, i+band] at row offset
+j-i+band), so each row needs exactly one dynamically-offset VMEM slice of
+the (band-padded) target — no gathers.
+
+Hardware adaptation note (DESIGN.md §2): this replaces merAligner's
+per-thread scalar DP; batch lanes are alignment tasks, so the TPU's 8x128
+VREG tiling wants B a multiple of 8 and band_store (2*band+1 padded) a
+multiple of 128 for full utilization.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEGINF = -(1 << 20)  # plain int: Pallas kernels cannot capture array consts
+BLOCK_B = 8
+
+
+def _kernel(q_ref, t_ref, qlen_ref, tlen_ref, best_ref, bq_ref, bt_ref, *,
+            band: int, match: int, mismatch: int, gap: int, QL: int, TL: int):
+    BW = 2 * band + 1
+    q = q_ref[...]        # [B, QL] uint8
+    tpad = t_ref[...]     # [B, TL + 2*band] uint8, band-padded with 4s
+    qlen = qlen_ref[...]  # [B]
+    tlen = tlen_ref[...]
+    B = q.shape[0]
+    off = jax.lax.broadcasted_iota(jnp.int32, (B, BW), 1)  # 0..2*band
+
+    # row 0: H[0, j] = j*gap inside the band
+    j0 = off - band  # j index at row 0
+    row0 = jnp.where((j0 >= 0) & (j0 <= jnp.minimum(tlen[:, None], band)),
+                     j0 * gap, NEGINF)
+
+    def log_rounds():
+        return max(1, math.ceil(math.log2(BW)))
+
+    def body(i, carry):
+        prev, best, bq, bt = carry
+        ii = i + 1  # DP row index (1-based)
+        # target slice for j = ii-band .. ii+band  ->  tpad[:, ii-1 : ii-1+BW]
+        tslice = jax.lax.dynamic_slice(tpad, (0, i), (B, BW))
+        qi = jax.lax.dynamic_slice(q, (0, i), (B, 1))
+        sub = jnp.where((tslice == qi) & (qi < 4) & (tslice < 4), match, mismatch)
+        # diag: prev row same offset; up: prev row offset+1 (j held, i+1)
+        diag = prev + sub
+        up_shift = jnp.concatenate([prev[:, 1:], jnp.full((B, 1), NEGINF)], axis=1)
+        up = up_shift + gap
+        cand = jnp.maximum(diag, up)
+        # boundary column j == 0 (empty target prefix) seeds the gap chain
+        j = off - band + ii
+        cand = jnp.where(j == 0, ii * gap, cand)
+        # left chain within the row: offset-1, same row -> max-plus scan
+        row = cand
+        shift_gap = gap
+        for _ in range(log_rounds()):
+            shifted = jnp.concatenate(
+                [jnp.full((B, 1), NEGINF), row[:, :-1]], axis=1
+            )
+            row = jnp.maximum(row, shifted + shift_gap)
+            shift_gap = shift_gap * 2
+        valid = (j >= 0) & (j <= tlen[:, None]) & (ii <= qlen[:, None])
+        row = jnp.where(valid, row, NEGINF)
+        rb = jnp.max(row, axis=1)
+        rj = jnp.argmax(row, axis=1).astype(jnp.int32) - band + ii
+        upd = rb > best
+        return (
+            row,
+            jnp.where(upd, rb, best),
+            jnp.where(upd, ii, bq),
+            jnp.where(upd, rj, bt),
+        )
+
+    init = (row0, jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B,), jnp.int32))
+    _, best, bq, bt = jax.lax.fori_loop(0, QL, body, init)
+    best_ref[...] = best
+    bq_ref[...] = bq
+    bt_ref[...] = bt
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("band", "match", "mismatch", "gap", "interpret", "block_b"),
+)
+def sw_extend(
+    query,
+    target,
+    qlen,
+    tlen,
+    *,
+    band: int = 15,
+    match: int = 1,
+    mismatch: int = -1,
+    gap: int = -1,
+    interpret: bool = True,
+    block_b: int = BLOCK_B,
+):
+    """Banded semi-global extension scores for a batch of (query, target).
+
+    Args:
+      query:  [B, QL] uint8 base codes.
+      target: [B, TL] uint8.
+      qlen, tlen: [B] int32 live lengths.
+    Returns:
+      (best_score, best_qpos, best_tpos): [B] int32 each, 1-based DP
+      coordinates of the best-scoring cell (0 = no positive extension).
+    """
+    B, QL = query.shape
+    TL = target.shape[1]
+    assert B % block_b == 0, f"B={B} not divisible by {block_b}"
+    # pad target by `band` 4s (mismatch sentinels) on both sides
+    tpad = jnp.pad(target, ((0, 0), (band, band)), constant_values=4)
+    grid = (B // block_b,)
+    out = lambda: jax.ShapeDtypeStruct((B,), jnp.int32)
+    vec = lambda: pl.BlockSpec((block_b,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, band=band, match=match, mismatch=mismatch, gap=gap,
+            QL=QL, TL=TL,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, QL), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, TL + 2 * band), lambda i: (i, 0)),
+            vec(),
+            vec(),
+        ],
+        out_specs=[vec(), vec(), vec()],
+        out_shape=[out(), out(), out()],
+        interpret=interpret,
+    )(query, tpad, qlen, tlen)

@@ -1,0 +1,149 @@
+"""Analytic FLOP/byte model per (arch x shape) — the roofline compute term.
+
+XLA's cost_analysis counts loop bodies once (scan trip counts are not
+multiplied in), so the compiled numbers under-report rolled-scan models.
+The dry-run therefore combines:
+  * analytic FLOPs (this module; standard MFU accounting — PaLM-appendix
+    style matmul terms, exact by construction),
+  * probe-L extrapolation of the compiled HLO totals (dryrun.py), which
+    agrees with the analytic model for the non-recurrent families and
+    validates both.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import layers
+
+
+def _attn_flops(cfg: ArchConfig, S: int, causal: bool) -> float:
+    hd = cfg.hd
+    d = cfg.d_model
+    proj = 2 * S * d * (cfg.n_heads * hd) + 2 * 2 * S * d * (
+        cfg.n_kv_heads * hd
+    ) + 2 * S * (cfg.n_heads * hd) * d
+    eff = S if not causal else S  # score matrix computed densely in XLA
+    if cfg.window:
+        eff = min(S, cfg.window)
+    score = 2 * 2 * cfg.n_heads * S * eff * hd
+    return proj + score
+
+
+def _ffn_flops(cfg: ArchConfig, S: int) -> float:
+    total = 0.0
+    if cfg.d_ff and (not cfg.is_moe or cfg.parallel_dense_ffn):
+        total += 3 * 2 * S * cfg.d_model * cfg.d_ff
+    if cfg.is_moe:
+        active = cfg.top_k + cfg.n_shared_experts
+        total += active * 3 * 2 * S * cfg.d_model * cfg.moe_d_ff
+        total += 2 * S * cfg.d_model * (cfg.n_experts + cfg.expert_pad)  # router
+    return total
+
+
+def _mamba_flops(cfg: ArchConfig, S: int) -> float:
+    d = cfg.d_model
+    d_in = 2 * d
+    H = d_in // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    proj = 2 * S * d * (2 * d_in + 2 * H * N + H) + 2 * S * d_in * d
+    # chunked SSD: intra-chunk S*Q mixing + state updates
+    Q = min(128, S)
+    ssd = 2 * S * Q * H * (P + N) + 4 * S * H * P * N
+    return proj + ssd
+
+
+def _xlstm_flops(cfg: ArchConfig, S: int) -> float:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    mlstm = 2 * S * d * (4 * d + 2 * H) + 2 * S * (
+        min(128, S) * H * 2 * hd + 2 * H * hd * hd
+    )
+    slstm = 2 * S * d * 8 * d
+    return mlstm + slstm  # per PAIR of layers
+
+
+def step_flops(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Forward FLOPs decomposed; train multiplies by 3 (fwd+bwd) and adds
+    remat recompute (+1 fwd)."""
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    vpad = layers.pad_to_multiple(cfg.vocab, 16)
+    if shape.kind == "decode":
+        # attention reads the cache: S_kv = shape.seq_len
+        S_kv = shape.seq_len
+        per_layer = 0.0
+        if cfg.family == "hybrid":
+            n_groups = cfg.n_layers // cfg.attn_every
+            body = _mamba_flops(cfg, 1) * cfg.n_layers
+            hd = cfg.hd
+            attn = n_groups * (
+                2 * cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+                + 2 * 2 * cfg.n_heads * S_kv * hd
+                + 2 * (cfg.n_heads * hd) * cfg.d_model
+                + 3 * 2 * cfg.d_model * cfg.d_ff
+            )
+            fwd = body + attn
+        elif cfg.xlstm:
+            fwd = _xlstm_flops(cfg, 1) * (cfg.n_layers // 2)
+        elif cfg.family == "encdec":
+            hd = cfg.hd
+            self_attn = (
+                2 * cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+                + 2 * 2 * cfg.n_heads * S_kv * hd
+                + 2 * (cfg.n_heads * hd) * cfg.d_model
+            )
+            cross = (
+                2 * cfg.d_model * cfg.n_heads * hd
+                + 2 * 2 * cfg.n_heads * cfg.enc_max_seq * hd
+                + 2 * (cfg.n_heads * hd) * cfg.d_model
+                + 2 * 2 * cfg.enc_max_seq * cfg.d_model * cfg.n_kv_heads * hd
+            )
+            fwd = cfg.n_layers * (self_attn + cross + _ffn_flops(cfg, 1))
+        else:
+            hd = cfg.hd
+            attn = (
+                2 * cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+                + 2 * 2 * cfg.n_heads * S_kv * hd
+                + 2 * (cfg.n_heads * hd) * cfg.d_model
+            )
+            fwd = cfg.n_layers * (attn + _ffn_flops(cfg, 1))
+        fwd += 2 * cfg.d_model * vpad  # lm head
+        total = B * fwd
+        return {"fwd": total, "total": total}
+    # train / prefill
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        fwd = _mamba_flops(cfg, S) * cfg.n_layers + n_groups * (
+            _attn_flops(cfg, S, True) + 3 * 2 * S * cfg.d_model * cfg.d_ff
+        )
+    elif cfg.xlstm:
+        fwd = _xlstm_flops(cfg, S) * (cfg.n_layers // 2)
+    elif cfg.family == "encdec":
+        Se = cfg.enc_max_seq
+        St = min(4096, max(128, S))
+        enc = cfg.n_enc_layers * (_attn_flops(cfg, Se, False)
+                                  + _ffn_flops(cfg, Se))
+        hd = cfg.hd
+        cross = cfg.n_layers * (
+            2 * St * cfg.d_model * cfg.n_heads * hd
+            + 2 * Se * cfg.d_model * 2 * cfg.n_kv_heads * hd
+            + 2 * 2 * cfg.n_heads * St * Se * hd
+            + 2 * St * (cfg.n_heads * hd) * cfg.d_model
+        )
+        dec = cfg.n_layers * (_attn_flops(cfg, St, True) + _ffn_flops(cfg, St))
+        fwd = enc + cross + dec
+        S_head = St
+        fwd += 2 * S_head * cfg.d_model * vpad
+        total = B * fwd * (3 if shape.kind == "train" else 1)
+        return {"fwd": B * fwd, "total": total}
+    else:
+        fwd = cfg.n_layers * (_attn_flops(cfg, S, True) + _ffn_flops(cfg, S))
+    fwd += 2 * S * cfg.d_model * vpad
+    fwd *= B
+    if shape.kind == "train":
+        # bwd = 2x fwd; remat recomputes the fwd once more
+        total = 4 * fwd
+    else:
+        total = fwd
+    return {"fwd": fwd, "total": total}

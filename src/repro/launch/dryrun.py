@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first import in the process (XLA locks device count on first
+jax init — hence the two lines above, before any other import).
+
+For each cell this builds the full production step — train_step
+(fwd+bwd+AdamW, remat, scanned layers) for train shapes, serve_step
+(one-token decode against the sharded KV/SSM state) for decode shapes —
+with production in/out shardings, then:
+
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...)
+                  .lower(*input_specs)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())   # proves it fits
+    print(compiled.cost_analysis())     # roofline terms
+
+and persists the roofline record (launch/roofline.py) to
+experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.models import registry
+from repro.train import optimizer as opt
+from . import mesh as mesh_lib
+from . import roofline, sharding
+
+
+def _mesh(name: str):
+    if name == "single":
+        devs = jax.devices()[:256]
+        import numpy as np
+
+        return jax.sharding.Mesh(
+            np.array(devs).reshape(16, 16), axis_names=("data", "model")
+        )
+    return mesh_lib.make_production_mesh(multi_pod=True)
+
+
+def adam_for(arch_id: str) -> opt.AdamConfig:
+    # arctic-480b: int8 moments are what makes v5e-256 feasible (DESIGN §5)
+    return opt.AdamConfig(quantize_moments=(arch_id == "arctic-480b"))
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh_name: str,
+               profile: str = "fsdp"):
+    return _lower_with_cfg(registry.get(arch_id), arch_id, shape_name,
+                           mesh_name, profile=profile)
+
+
+def _probe_layers(cfg):
+    """Two small layer counts for the probe-L extrapolation."""
+    if cfg.family == "hybrid":
+        return cfg.attn_every, 2 * cfg.attn_every
+    if cfg.xlstm:
+        return 2, 4
+    return 1, 2
+
+
+def _with_layers(cfg, L: int):
+    import dataclasses
+
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, n_layers=L, n_enc_layers=L)
+    return dataclasses.replace(cfg, n_layers=L)
+
+
+def _hlo_totals(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = roofline.collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll["total"]),
+        "coll_detail": coll,
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str,
+             out_dir: str = "experiments/dryrun", verbose: bool = True,
+             attn_impl: str = "naive", tag: str = "", seq_split: bool = False,
+             profile: str = "fsdp"):
+    """Full compile (memory proof) + probe-L extrapolation (exact HLO
+    totals despite rolled scans: cost_analysis counts loop bodies once, so
+    totals are linear in the layer count — two probes identify the line)."""
+    from repro.models import flags
+
+    flags.ATTN_IMPL = attn_impl
+    flags.SEQ_SPLIT_ATTN = seq_split
+    flags.MESH = _mesh(mesh_name)
+    import repro.configs  # noqa: F401  (cfg modules are pure)
+
+    cfg_full = registry.get(arch_id)
+    t0 = time.time()
+    lowered, cfg, shape, mesh, chips = lower_cell(arch_id, shape_name,
+                                                  mesh_name, profile=profile)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if verbose:
+        print(f"[{arch_id} x {shape_name} x {mesh_name} attn={attn_impl}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print("  memory_analysis:", mem)
+    # ---- probe-L extrapolation (probes unroll their layer scans so that
+    # cost_analysis sees every layer body; totals are linear in L) ----
+    L1, L2 = _probe_layers(cfg_full)
+    probes = {}
+    flags.UNROLL_LAYERS = True
+    try:
+        for L in (L1, L2):
+            registry_cfg = _with_layers(cfg_full, L)
+            lw, *_ = _lower_with_cfg(registry_cfg, arch_id, shape_name,
+                                     mesh_name, profile=profile)
+            probes[L] = _hlo_totals(lw.compile())
+    finally:
+        flags.UNROLL_LAYERS = False
+    L_full = cfg_full.n_layers
+    scale = (L_full - L1) / (L2 - L1)
+    # clamp: CSE across unrolled layers can make f(L2) < f(L1) for
+    # collectives hoisted out of the loop; totals are never below a probe
+    lin = lambda k: max(
+        probes[L1][k] + (probes[L2][k] - probes[L1][k]) * scale,
+        probes[L1][k],
+    )
+
+    rec = roofline.Roofline(
+        arch=arch_id,
+        shape=shape_name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=lin("flops"),
+        hlo_bytes=lin("bytes"),
+        coll_bytes=lin("coll"),
+        coll_detail={
+            "probe_L1": probes[L1]["coll_detail"],
+            "probe_L2": probes[L2]["coll_detail"],
+        },
+        model_flops=roofline.model_flops(cfg_full, shape),
+        per_device_memory={
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        },
+    )
+    from . import analytic
+
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch_id}__{shape_name}__{mesh_name}{tag}.json".replace("/", "_")
+    payload = rec.to_json()
+    payload["attn_impl"] = attn_impl
+    payload["seq_split"] = seq_split
+    payload["profile"] = profile
+    payload["analytic_flops"] = analytic.step_flops(cfg_full, shape)
+    payload["lower_s"] = t_lower
+    payload["compile_s"] = t_compile
+    # compute term from the analytic model (exact); HLO term as diagnostic
+    t_comp_analytic = payload["analytic_flops"]["total"] / (
+        chips * roofline.PEAK_FLOPS
+    )
+    payload["t_compute_analytic"] = t_comp_analytic
+    payload["bottleneck_analytic"] = max(
+        {"compute": t_comp_analytic, "memory": rec.t_memory,
+         "collective": rec.t_collective}.items(), key=lambda kv: kv[1],
+    )[0]
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(payload, f, indent=1)
+    if verbose:
+        print(f"  flops(extrap)={rec.hlo_flops:.3e} "
+              f"analytic={payload['analytic_flops']['total']:.3e} "
+              f"coll={rec.coll_bytes:.3e}B bottleneck={payload['bottleneck_analytic']}")
+    return payload
+
+
+def _lower_with_cfg(cfg, arch_id: str, shape_name: str, mesh_name: str,
+                    profile: str = "fsdp"):
+    """lower_cell but with an explicit (probe) config."""
+    shape = SHAPES[shape_name]
+    mesh = _mesh(mesh_name)
+    chips = mesh.devices.size
+    params_abs, specs = sharding.abstract_params(cfg, dtype=jnp.bfloat16)
+    p_shard = sharding.param_shardings(specs, params_abs, mesh,
+                                       profile=profile)
+    in_specs = registry.input_specs(cfg, shape)
+    b_shard = sharding.batch_shardings(cfg, shape, mesh)
+    if shape.kind == "train":
+        adam = adam_for(arch_id)
+        opt_abs = sharding.abstract_opt_state(params_abs, adam)
+        o_shard = sharding.opt_state_shardings(opt_abs, params_abs, p_shard,
+                                               mesh)
+        step = sharding.make_train_step(cfg, adam)
+        jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None))
+        return jitted.lower(params_abs, opt_abs, in_specs), cfg, shape, mesh, chips
+    if shape.kind == "prefill":
+        fns = registry.model_fns(cfg)
+
+        def prefill(params, batch):
+            logits, _ = fns["forward"](cfg, params, batch, remat=False)
+            return logits
+
+        jitted = jax.jit(prefill, in_shardings=(p_shard, b_shard),
+                         out_shardings=None)
+        return jitted.lower(params_abs, in_specs), cfg, shape, mesh, chips
+    fns = registry.model_fns(cfg)
+    shape_cfg = SHAPES[shape_name]
+    state_abs = jax.eval_shape(
+        lambda: fns["init_decode_state"](cfg, shape_cfg.global_batch,
+                                         shape_cfg.seq_len)
+    )
+    s_shard = sharding.decode_state_shardings(cfg, state_abs, shape_cfg, mesh)
+    step = sharding.make_serve_step(cfg)
+    jitted = jax.jit(step, in_shardings=(p_shard, s_shard, b_shard["tokens"]),
+                     out_shardings=(None, s_shard))
+    return (jitted.lower(params_abs, state_abs, in_specs["tokens"]), cfg,
+            shape_cfg, mesh, chips)
+
+
+def all_cells():
+    for arch_id in registry.ARCHS:
+        for shape_name in SHAPES:
+            if shape_applicable(arch_id, shape_name):
+                yield arch_id, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--attn", default="naive", choices=["naive", "chunked"])
+    ap.add_argument("--seq-split", action="store_true")
+    ap.add_argument("--profile", default="fsdp", choices=["fsdp", "tp_out"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        ok, fail = 0, 0
+        for arch_id, shape_name in all_cells():
+            for mesh_name in ("single", "multi"):
+                fname = os.path.join(
+                    args.out,
+                    f"{arch_id}__{shape_name}__{mesh_name}{args.tag}.json",
+                )
+                if args.skip_existing and os.path.exists(fname):
+                    ok += 1
+                    continue
+                try:
+                    run_cell(arch_id, shape_name, mesh_name, args.out,
+                             attn_impl=args.attn, tag=args.tag,
+                             seq_split=args.seq_split, profile=args.profile)
+                    ok += 1
+                except Exception as e:  # noqa
+                    fail += 1
+                    print(f"FAIL {arch_id} {shape_name} {mesh_name}: {e}")
+                    traceback.print_exc()
+                    if not args.continue_on_error:
+                        raise
+        print(f"dry-run: {ok} ok, {fail} failed")
+    else:
+        run_cell(args.arch, args.shape, args.mesh, args.out,
+                 attn_impl=args.attn, tag=args.tag,
+                 seq_split=args.seq_split, profile=args.profile)
+
+
+if __name__ == "__main__":
+    main()

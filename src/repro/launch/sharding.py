@@ -1,0 +1,268 @@
+"""Sharding assembly: logical param specs -> NamedShardings; per-shape
+input/state shardings; the jit'd production train / serve steps.
+
+Divisibility guard: a dim sharded over a mesh axis must divide evenly, or
+GSPMD rejects the sharding.  `_fit_spec` drops (sets to None) any spec
+entry that does not divide its dim — e.g. llama3.2's 24 q-heads on the
+16-way model axis fall back to batch-parallel attention, a real finding
+the roofline table surfaces (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import layers, registry
+from repro.train import optimizer as opt
+from . import mesh as mesh_lib
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, entries):
+        out.append(ax if (ax is None or dim % _axis_size(mesh, ax) == 0) else None)
+    return P(*out)
+
+
+def param_shardings(specs, params, mesh: Mesh, *, fsdp_pods: bool = False,
+                    profile: str = "fsdp"):
+    """Logical axis tuples -> NamedShardings, divisibility-checked.
+
+    profile="fsdp" (train default): in-dims shard over data (ZeRO-3),
+    out-dims over model.
+    profile="tp_out" (§Perf decode fix): contraction dims stay local —
+    weights are stationary, only small activation reductions cross the
+    ICI; the model-axis dim upgrades to (model, data) when divisible so
+    per-chip weight memory matches the FSDP profile.
+    """
+    if profile == "tp_out":
+        m = _axis_size(mesh, "model")
+        md = m * _axis_size(mesh, "data")
+
+        d_sz = _axis_size(mesh, "data")
+
+        def tp_one(axes, shape):
+            entries = []
+            upgraded = False
+            for dim, a in zip(shape, tuple(axes) + (None,) * len(shape)):
+                if a == "model":
+                    if not upgraded and dim % md == 0:
+                        entries.append(("model", "data"))
+                        upgraded = True
+                    elif dim % m == 0:
+                        entries.append("model")
+                    else:
+                        entries.append(None)
+                else:
+                    entries.append(None)
+            if not upgraded:
+                # The model dim could not absorb the data axis (e.g. 128
+                # experts on a 256-way product).  Park the data axis on a
+                # logically-REPLICATED dim (the expert ff dim): the d_model
+                # contraction then stays local per expert shard — token
+                # routing is MBs — and only the tiny per-token partials
+                # cross the ICI.  Putting it on the d_model ("data") dim
+                # instead forces weight all-gathers at decode (measured:
+                # 1.16 GB/layer on arctic-480b).
+                order = [i for i, a in enumerate(axes)
+                         if a == "replicated" and i > 0] + [
+                    i for i, a in enumerate(axes) if a == "data"
+                ] + [
+                    i for i in range(len(shape) - 1, -1, -1)
+                ]
+                for i in order:
+                    if entries[i] is None and shape[i] % d_sz == 0 and \
+                       shape[i] >= d_sz:
+                        entries[i] = "data"
+                        break
+            return P(*entries)
+
+        p_flat, treedef = jax.tree_util.tree_flatten(params)
+        s_flat = treedef.flatten_up_to(specs)
+        out = [
+            NamedSharding(mesh, tp_one(s, p.shape))
+            for p, s in zip(p_flat, s_flat)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+    pspecs = layers.logical_to_mesh(specs, fsdp_pods=fsdp_pods)
+    if "pod" not in mesh.axis_names:
+        # single-pod mesh: strip pod references
+        pspecs = jax.tree.map(
+            lambda s: P(*[("data" if a == ("pod", "data") else a) for a in s]),
+            pspecs, is_leaf=lambda x: isinstance(x, P),
+        )
+    p_flat, treedef = jax.tree_util.tree_flatten(params)
+    s_flat = treedef.flatten_up_to(pspecs)
+    out = [
+        NamedSharding(mesh, _fit_spec(s, p.shape, mesh))
+        for p, s in zip(p_flat, s_flat)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    dp = mesh_lib.dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    specs = registry.input_specs(cfg, shape)
+
+    def one(s):
+        # shard the batch dim when divisible, else replicate (long_500k B=1)
+        if s.shape[0] % _axis_size(mesh, dp) == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (len(s.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(s.shape))))
+
+    return jax.tree.map(one, specs, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def decode_state_shardings(cfg: ArchConfig, state_template, shape: ShapeConfig,
+                           mesh: Mesh):
+    """KV caches / SSM states: batch over DP when divisible; for B=1
+    long-context cells the cache SEQUENCE dim rides the data axis
+    (sequence-parallel cache); head/channel dims over model when divisible."""
+    dp = mesh_lib.dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    B = shape.global_batch
+    batch_ok = B % _axis_size(mesh, dp) == 0
+
+    def one(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        # find the batch dim: our conventions put it at index 0 (flat state)
+        # or 1 (layer-stacked caches [L, B, ...])
+        spec = [None] * x.ndim
+        bdim = 0 if x.shape[0] == B else (1 if x.ndim > 1 and x.shape[1] == B else None)
+        if bdim is not None and batch_ok:
+            spec[bdim] = dp
+        elif bdim is not None and x.ndim >= 3:
+            # B=1: shard the sequence dim (cache dim right after batch)
+            sdim = bdim + 1
+            if x.shape[sdim] % _axis_size(mesh, "data") == 0:
+                spec[sdim] = "data"
+        # §Perf (arctic decode finding): ALWAYS try the model axis on the
+        # dim after batch — for KV caches that is the sequence dim
+        # (FlashDecoding-style split-KV: attention over a sharded cache
+        # becomes local partial softmax + a tiny combine psum, instead of
+        # an all-gather of the whole cache when heads don't divide the
+        # axis); for SSM states it is the head dim (channel parallelism).
+        model_used = False
+        if bdim is not None and x.ndim >= 3:
+            sdim = bdim + 1
+            if spec[sdim] is None and x.shape[sdim] % _axis_size(
+                mesh, "model"
+            ) == 0 and x.shape[sdim] >= _axis_size(mesh, "model"):
+                spec[sdim] = "model"
+                model_used = True
+        # otherwise: model axis on a trailing heads/channel dim
+        if not model_used:
+            for d in range(x.ndim - 2, x.ndim):
+                if d <= (bdim or 0):
+                    continue
+                if spec[d] is None and x.shape[d] % _axis_size(mesh, "model") == 0 \
+                   and x.shape[d] >= _axis_size(mesh, "model"):
+                    spec[d] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, state_template)
+
+
+# ---------------------------------------------------------------------------
+# Production steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, adam: opt.AdamConfig,
+                    use_kernel: bool = False):
+    fns = registry.model_fns(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: fns["loss_fn"](cfg, p, batch, use_kernel=use_kernel)
+        )(params)
+        new_params, new_opt, gnorm = opt.apply_updates(
+            params, grads, opt_state, adam
+        )
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    fns = registry.model_fns(cfg)
+
+    def serve_step(params, state, tokens):
+        logits, new_state = fns["decode_step"](cfg, params, state, tokens)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, new_state
+
+    return serve_step
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """(ShapeDtypeStruct params, logical specs) without allocating.
+
+    Specs are static strings, so they ride out of eval_shape via a capture
+    (the trace executes exactly once)."""
+    fns = registry.model_fns(cfg)
+    captured = {}
+
+    def build(k):
+        p, s = fns["init_params"](cfg, k, dtype)
+        captured["specs"] = s
+        return p
+
+    p_shape = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return p_shape, captured["specs"]
+
+
+def abstract_opt_state(params_abs, adam: opt.AdamConfig):
+    return jax.eval_shape(lambda: opt.init_state(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_abs), adam
+    ))
+
+
+def opt_state_shardings(opt_abs, params_abs, p_shardings, mesh: Mesh):
+    """Moments follow their parameter's sharding; quantized (blocked int8)
+    moments and their scales shard the block dim over data when divisible."""
+    p_flat, treedef = jax.tree_util.tree_flatten(params_abs)
+    sh_flat = treedef.flatten_up_to(p_shardings)
+
+    def one_moments(mtree):
+        m_flat = treedef.flatten_up_to(mtree)
+        out = []
+        for p, sh, mst in zip(p_flat, sh_flat, m_flat):
+            if mst.value.shape == p.shape:
+                vs = sh
+            else:  # int8-blocked layout [n_blocks, BLOCK]
+                vs = NamedSharding(mesh, _fit_spec(P("data"), mst.value.shape,
+                                                   mesh))
+            if mst.scale is None:
+                out.append(opt.MomentState(vs, None))
+            else:
+                ss = NamedSharding(mesh, _fit_spec(P("data"), mst.scale.shape,
+                                                   mesh))
+                out.append(opt.MomentState(vs, ss))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return {
+        "m": one_moments(opt_abs["m"]),
+        "v": one_moments(opt_abs["v"]),
+        "step": NamedSharding(mesh, P()),
+    }

@@ -1,0 +1,156 @@
+"""Production training launcher.
+
+Fault-tolerance posture (DESIGN.md §5):
+  * periodic async checkpoints (train/checkpoint.py) with atomic publish;
+  * auto-resume from the latest checkpoint at startup — a restarted job
+    (node failure, preemption) loses at most `ckpt_every` steps;
+  * elastic restart: the checkpoint layout is logical, so a job restarted
+    with a different device count restores and reshards transparently;
+  * preemption hook: SIGTERM requests a final blocking checkpoint before
+    exit (the Borg/SLURM grace-period pattern);
+  * straggler monitor: per-step wall times feed an EWMA z-score; steps
+    slower than `straggler_z` sigma are logged — on real multi-host pods
+    this is the signal that triggers hot-spare swap-in.
+
+Usage (CPU-scale example; examples/train_lm.py wraps this):
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+from repro.data.tokens import synthetic_token_stream
+from repro.models import registry
+from repro.train import optimizer as opt
+from repro.train.checkpoint import Checkpointer
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    batch: int = 8
+    seq: int = 128
+    ckpt_every: int = 20
+    ckpt_dir: str = "checkpoints"
+    log_every: int = 10
+    straggler_z: float = 3.0
+    adam: opt.AdamConfig = dataclasses.field(default_factory=opt.AdamConfig)
+
+
+class StragglerMonitor:
+    """EWMA step-time z-score tracker."""
+
+    def __init__(self, z: float, alpha: float = 0.1):
+        self.z = z
+        self.alpha = alpha
+        self.mean = None
+        self.var = 0.0
+        self.flagged = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        if self.mean is None:
+            self.mean = dt
+            return False
+        sd = max(self.var ** 0.5, 1e-6)
+        is_straggler = dt > self.mean + self.z * sd and step > 5
+        if is_straggler:
+            self.flagged.append((step, dt))
+        d = dt - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return is_straggler
+
+
+def train(arch_id: str, tcfg: TrainConfig, *, smoke: bool = True,
+          resume: bool = True, seed: int = 0):
+    cfg = registry.get(arch_id, smoke=smoke)
+    fns = registry.model_fns(cfg)
+    params, _ = fns["init_params"](cfg, jax.random.PRNGKey(seed))
+    opt_state = opt.init_state(params, tcfg.adam)
+    ckpt = Checkpointer(f"{tcfg.ckpt_dir}/{arch_id}")
+    start_step = 0
+    if resume and ckpt.latest_step() is not None:
+        (params, opt_state), start_step = ckpt.restore((params, opt_state))
+        print(f"resumed from step {start_step}")
+
+    def step_fn(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: fns["loss_fn"](cfg, p, batch)
+        )(params)
+        params, opt_state, gnorm = opt.apply_updates(
+            params, grads, opt_state, tcfg.adam
+        )
+        return params, opt_state, loss, gnorm
+
+    step_jit = jax.jit(step_fn, donate_argnums=(0, 1))
+    stream = synthetic_token_stream(
+        vocab=cfg.vocab, batch=tcfg.batch, seq=tcfg.seq, seed=seed
+    )
+
+    # preemption hook: one final blocking checkpoint on SIGTERM
+    preempted = {"flag": False}
+
+    def on_sigterm(signum, frame):
+        preempted["flag"] = True
+
+    old = signal.signal(signal.SIGTERM, on_sigterm)
+    monitor = StragglerMonitor(tcfg.straggler_z)
+    losses = []
+    try:
+        for step in range(start_step, tcfg.steps):
+            batch = next(stream)
+            if cfg.family == "encdec" or cfg.frontend:
+                batch = registry.smoke_batch(cfg, tcfg.batch, tcfg.seq,
+                                             seed + step)
+            t0 = time.time()
+            params, opt_state, loss, gnorm = step_jit(params, opt_state, batch)
+            loss.block_until_ready()
+            dt = time.time() - t0
+            if monitor.observe(step, dt):
+                print(f"step {step}: STRAGGLER ({dt:.3f}s vs "
+                      f"{monitor.mean:.3f}s mean)")
+            losses.append(float(loss))
+            if step % tcfg.log_every == 0:
+                print(f"step {step} loss {float(loss):.4f} "
+                      f"gnorm {float(gnorm):.3f} {dt:.3f}s")
+            if (step + 1) % tcfg.ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state))
+            if preempted["flag"]:
+                print(f"preempted at step {step}: final checkpoint")
+                ckpt.save(step + 1, (params, opt_state), blocking=True)
+                break
+        else:
+            ckpt.save(tcfg.steps, (params, opt_state), blocking=True)
+    finally:
+        ckpt.wait()
+        signal.signal(signal.SIGTERM, old)
+    return params, losses, monitor
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    args = ap.parse_args()
+    tcfg = TrainConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                       ckpt_dir=args.ckpt_dir)
+    _, losses, monitor = train(args.arch, tcfg, smoke=args.smoke)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
+          f"stragglers flagged: {len(monitor.flagged)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""GQA attention: train/prefill (full or sliding-window causal) + cached
+decode, with optional Pallas flash kernel on TPU.
+
+The XLA einsum path is the default (and the dry-run path — Pallas TPU
+kernels cannot compile for host CPU devices); `use_kernel=True` switches
+prefill/train to kernels.flash_attention on real hardware.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import layers
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32):
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["wq"], s["wq"] = layers.dense_init(k1, cfg.d_model, cfg.n_heads * hd,
+                                         dtype=dtype)
+    p["wk"], s["wk"] = layers.dense_init(k2, cfg.d_model, cfg.n_kv_heads * hd,
+                                         dtype=dtype)
+    p["wv"], s["wv"] = layers.dense_init(k3, cfg.d_model, cfg.n_kv_heads * hd,
+                                         dtype=dtype)
+    p["wo"], s["wo"] = layers.dense_init(k4, cfg.n_heads * hd, cfg.d_model,
+                                         axes=("model", "data"), dtype=dtype)
+    return p, s
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray    # [B, S_max, KH, hd]
+    v: jnp.ndarray
+    pos: jnp.ndarray  # scalar int32 current length
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.hd
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        v=jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        pos=jnp.int32(0),
+    )
+
+
+def _qkv(p, x, cfg: ArchConfig, rope, positions=None):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if rope is not None:
+        cos, sin, rot = rope
+        q = layers.apply_rope(q, cos, sin, rot, positions)
+        k = layers.apply_rope(k, cos, sin, rot, positions)
+    return q, k, v
+
+
+def _naive_attention(q, k, v, cfg: ArchConfig, causal: bool):
+    B, S = q.shape[:2]
+    hd = cfg.hd
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bshd,bthd->bhst", q, kf) * scale
+    if causal:
+        ii = jnp.arange(S)
+        mask = ii[:, None] >= ii[None, :]
+        if cfg.window:
+            mask = mask & (ii[:, None] - ii[None, :] < cfg.window)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, vf)
+
+
+def _chunked_attention(q, k, v, cfg: ArchConfig, causal: bool,
+                       block_q: int = 512, block_k: int = 512):
+    """Online-softmax attention in pure XLA (flash dataflow, no Pallas).
+
+    Peak live score tensor is [B, H, block_q, block_k] instead of
+    [B, H, S, S] — the §Perf memory fix for the long-sequence cells.
+    Causal masking is applied per block pair; fully-masked pairs still
+    execute (scan has a static trip count — the Pallas kernel skips them
+    on real hardware).
+    """
+    B, S, H, hd = q.shape
+    rep = H // cfg.n_kv_heads
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    nq, nk = S // bq, S // bk
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = hd ** -0.5
+    qb = q.reshape(B, nq, bq, H, hd)
+    kb = jnp.moveaxis(kf.reshape(B, nk, bk, H, hd), 1, 0)
+    vb = jnp.moveaxis(vf.reshape(B, nk, bk, H, hd), 1, 0)
+    ii = jnp.arange(bq)
+    jj = jnp.arange(bk)
+
+    def q_block(qi, qx):
+        # qx: [B, bq, H, hd]
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            kj, kx, vx = inp
+            s = jnp.einsum("bqhd,bkhd->bhqk", qx, kx).astype(jnp.float32)
+            s = s * scale
+            qpos = qi * bq + ii
+            kpos = kj * bk + jj
+            if causal:
+                mask = qpos[:, None] >= kpos[None, :]
+                if cfg.window:
+                    mask = mask & (qpos[:, None] - kpos[None, :] < cfg.window)
+                s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qx.dtype), vx
+            ).astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, H, bq, hd), jnp.float32)
+        m0 = jnp.full((B, H, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(nk), kb, vb),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2).astype(qx.dtype)  # [B, bq, H, hd]
+
+    # remat the per-q-block scan: without it AD saves every [bq,bk] prob
+    # tile (the whole S x S matrix again); with it backward recomputes the
+    # kv sweep from the block inputs — the flash-backward tradeoff.
+    outs = jax.lax.map(
+        jax.checkpoint(lambda args: q_block(*args)),
+        (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)),
+    )
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def full_attention(p, x, cfg: ArchConfig, rope, *, causal: bool = True,
+                   use_kernel: bool = False):
+    """Train/prefill attention over the whole sequence."""
+    from . import flags
+
+    B, S, _ = x.shape
+    hd = cfg.hd
+    seq_split = flags.SEQ_SPLIT_ATTN and flags.MESH is not None and (
+        "model" in getattr(flags.MESH, "axis_names", ())
+    )
+    if seq_split:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        # reshard the sequence dim over the (otherwise idle-for-attention)
+        # model axis; all attention work below is then seq-parallel
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(flags.MESH, P(flags.dp_axes(), "model", None))
+        )
+    q, k, v = _qkv(p, x, cfg, rope)
+    if use_kernel or flags.ATTN_IMPL == "flash":
+        from repro.kernels import ops
+
+        o = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal,
+        ).transpose(0, 2, 1, 3)
+    elif flags.ATTN_IMPL == "chunked" and S >= 1024:
+        o = _chunked_attention(q, k, v, cfg, causal)
+    else:
+        o = _naive_attention(q, k, v, cfg, causal)
+    o = o.reshape(B, S, cfg.n_heads * hd)
+    out = o @ p["wo"]
+    if seq_split:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        out = jax.lax.with_sharding_constraint(
+            out, NamedSharding(flags.MESH, P(flags.dp_axes(), None, None))
+        )
+    return out
+
+
+def decode_attention(p, x, cfg: ArchConfig, rope, cache: KVCache):
+    """One-token decode against the KV cache."""
+    B, S, _ = x.shape
+    assert S == 1
+    hd = cfg.hd
+    positions = jnp.full((B, 1), cache.pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, rope, positions)
+    ck = jax.lax.dynamic_update_slice(
+        cache.k, k.astype(cache.k.dtype), (0, cache.pos, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cache.v, v.astype(cache.v.dtype), (0, cache.pos, 0, 0)
+    )
+    rep = cfg.n_heads // cfg.n_kv_heads
+    scale = hd ** -0.5
+    # [B, 1, H, hd] x [B, T, KH, hd] with head grouping
+    qg = q.reshape(B, 1, cfg.n_kv_heads, rep, hd)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg, ck.astype(x.dtype))[..., 0, :]
+    logits = logits * scale  # [B, KH, rep, T]
+    T = ck.shape[1]
+    tpos = jnp.arange(T)
+    live = tpos <= cache.pos
+    if cfg.window:
+        live = live & (tpos > cache.pos - cfg.window)
+    logits = jnp.where(live[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkrt,btkd->bkrd", probs, cv.astype(x.dtype))
+    o = o.reshape(B, 1, cfg.n_heads * hd)
+    out = o @ p["wo"]
+    return out, KVCache(k=ck, v=cv, pos=cache.pos + 1)

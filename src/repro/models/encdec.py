@@ -1,0 +1,202 @@
+"""Encoder-decoder stack (whisper-large-v3 backbone).
+
+The audio conv frontend is a STUB per the assignment: input_specs provide
+precomputed frame embeddings [B, S_audio, d_model].  Positions are learned
+(whisper convention); the decoder adds cross-attention into the encoder
+output, with self-attn KV caching for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import attention, ffn, flags, layers
+
+
+def _xattn_init(key, cfg: ArchConfig, dtype):
+    # cross-attention: q from decoder, k/v from encoder states
+    return attention.init(key, cfg, dtype)
+
+
+def _enc_layer_init(cfg: ArchConfig, dtype):
+    def one(key):
+        ks = jax.random.split(key, 2)
+        p, s = {}, {}
+        p["attn"], s["attn"] = attention.init(ks[0], cfg, dtype)
+        p["mlp"], s["mlp"] = ffn.glu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        p["ln1"], s["ln1"] = layers.norm_init(cfg.d_model, dtype)
+        p["ln2"], s["ln2"] = layers.norm_init(cfg.d_model, dtype)
+        return p, s
+
+    return one
+
+
+def _dec_layer_init(cfg: ArchConfig, dtype):
+    def one(key):
+        ks = jax.random.split(key, 3)
+        p, s = {}, {}
+        p["attn"], s["attn"] = attention.init(ks[0], cfg, dtype)
+        p["xattn"], s["xattn"] = _xattn_init(ks[1], cfg, dtype)
+        p["mlp"], s["mlp"] = ffn.glu_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+        p["ln1"], s["ln1"] = layers.norm_init(cfg.d_model, dtype)
+        p["ln2"], s["ln2"] = layers.norm_init(cfg.d_model, dtype)
+        p["ln3"], s["ln3"] = layers.norm_init(cfg.d_model, dtype)
+        return p, s
+
+    return one
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    from .transformer import _stacked_init
+
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    vpad = layers.pad_to_multiple(cfg.vocab, 16)
+    p["embed"], s["embed"] = layers.embed_init(ks[0], vpad, cfg.d_model, dtype)
+    p["pos_dec"] = jax.random.normal(ks[1], (cfg.max_seq, cfg.d_model), dtype) * 0.01
+    s["pos_dec"] = ("replicated", "data")
+    p["pos_enc"] = jax.random.normal(
+        ks[2], (cfg.enc_max_seq, cfg.d_model), dtype
+    ) * 0.01
+    s["pos_enc"] = ("replicated", "data")
+    p["enc"], s["enc"] = _stacked_init(_enc_layer_init(cfg, dtype), ks[3],
+                                       cfg.n_enc_layers)
+    p["dec"], s["dec"] = _stacked_init(_dec_layer_init(cfg, dtype), ks[4],
+                                       cfg.n_layers)
+    p["ln_f"], s["ln_f"] = layers.norm_init(cfg.d_model, dtype)
+    p["ln_enc"], s["ln_enc"] = layers.norm_init(cfg.d_model, dtype)
+    p["lm_head"], s["lm_head"] = layers.dense_init(
+        ks[5], cfg.d_model, vpad, axes=("data", "model"), dtype=dtype
+    )
+    return p, s
+
+
+def _cross_attention(p, x, enc_out, cfg: ArchConfig):
+    B, S, _ = x.shape
+    Se = enc_out.shape[1]
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (enc_out @ p["wk"]).reshape(B, Se, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(B, Se, cfg.n_kv_heads, hd)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q, kf) * (hd ** -0.5)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhst,bthd->bshd", probs, vf).reshape(B, S, cfg.n_heads * hd)
+    return o @ p["wo"]
+
+
+def encode(cfg: ArchConfig, params, frames, *, remat: bool = True):
+    """frames: [B, S_audio, d_model] (stub frontend output)."""
+    Sa = frames.shape[1]
+    h = frames + params["pos_enc"][:Sa][None]
+
+    def body(h, lp):
+        a = attention.full_attention(
+            lp["attn"], layers.layernorm(h, lp["ln1"], eps=cfg.norm_eps), cfg,
+            None, causal=False,
+        )
+        h = h + a
+        h = h + ffn.glu(
+            lp["mlp"], layers.layernorm(h, lp["ln2"], eps=cfg.norm_eps), cfg.act
+        )
+        return h, None
+
+    f = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(f, h, params["enc"],
+                        unroll=flags.scan_unroll(cfg.n_enc_layers))
+    return layers.layernorm(h, params["ln_enc"], eps=cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params, batch, *, use_kernel: bool = False,
+            remat: bool = True):
+    """Teacher-forced forward: batch = {"frontend": frames, "tokens": text}."""
+    enc_out = encode(cfg, params, batch["frontend"], remat=remat)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = params["embed"][tokens] + params["pos_dec"][:S][None]
+
+    def body(carry, lp):
+        h = carry
+        a = attention.full_attention(
+            lp["attn"], layers.layernorm(h, lp["ln1"], eps=cfg.norm_eps), cfg,
+            None, causal=True, use_kernel=use_kernel,
+        )
+        h = h + a
+        h = h + _cross_attention(
+            lp["xattn"], layers.layernorm(h, lp["ln2"], eps=cfg.norm_eps),
+            enc_out, cfg,
+        )
+        h = h + ffn.glu(
+            lp["mlp"], layers.layernorm(h, lp["ln3"], eps=cfg.norm_eps), cfg.act
+        )
+        return h, None
+
+    f = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(f, h, params["dec"],
+                        unroll=flags.scan_unroll(cfg.n_layers))
+    h = layers.layernorm(h, params["ln_f"], eps=cfg.norm_eps)
+    return h @ params["lm_head"], jnp.float32(0.0)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, use_kernel: bool = False,
+            aux_weight: float = 0.0):
+    logits, _ = forward(cfg, params, batch, use_kernel=use_kernel)
+    tokens = batch["tokens"]
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1
+    )
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], jnp.float32),
+         jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1
+    )
+    return layers.cross_entropy(logits, targets, mask)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    cache = attention.init_cache(cfg, batch, max_len, dtype)
+    return {
+        "caches": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape)
+            if a.ndim else jnp.broadcast_to(a, (cfg.n_layers,)),
+            cache,
+        ),
+        # encoder output computed once at prefill; [B, Se, d]
+        "enc_out": jnp.zeros((batch, cfg.enc_max_seq, cfg.d_model), dtype),
+        "pos": jnp.int32(0),
+    }
+
+
+def decode_step(cfg: ArchConfig, params, state, tokens):
+    B = tokens.shape[0]
+    pos = state["pos"]
+    h = params["embed"][tokens] + jax.lax.dynamic_slice(
+        params["pos_dec"], (pos, 0), (1, cfg.d_model)
+    )[None]
+    enc_out = state["enc_out"].astype(h.dtype)
+
+    def body(h, xs):
+        lp, cache_l = xs
+        cache = attention.KVCache(k=cache_l.k, v=cache_l.v, pos=pos)
+        a, new_cache = attention.decode_attention(
+            lp["attn"], layers.layernorm(h, lp["ln1"], eps=cfg.norm_eps), cfg,
+            None, cache,
+        )
+        h = h + a
+        h = h + _cross_attention(
+            lp["xattn"], layers.layernorm(h, lp["ln2"], eps=cfg.norm_eps),
+            enc_out, cfg,
+        )
+        h = h + ffn.glu(
+            lp["mlp"], layers.layernorm(h, lp["ln3"], eps=cfg.norm_eps), cfg.act
+        )
+        return h, new_cache
+
+    h, new_caches = jax.lax.scan(body, h, (params["dec"], state["caches"]))
+    h = layers.layernorm(h, params["ln_f"], eps=cfg.norm_eps)
+    return h @ params["lm_head"], {
+        "caches": new_caches, "enc_out": state["enc_out"], "pos": pos + 1
+    }

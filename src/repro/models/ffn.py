@@ -1,0 +1,110 @@
+"""FFN blocks: GLU dense + mixture-of-experts with sort-based dispatch.
+
+The MoE dispatch reuses the SAME bucket logic as the assembly pipeline's
+UC1 exchange (core/exchange._bucket): tokens sort by destination expert,
+rank within the run, and scatter into a capacity-padded [E, C, d] buffer —
+the paper's aggregated k-mer routing with experts as owner shards
+(DESIGN.md §4).  Under EP sharding (expert dim on the "model" axis) XLA
+lowers the scatter/gather pair into the expected all-to-alls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.exchange import _bucket
+from . import layers
+
+
+def glu_init(key, d: int, f: int, dtype=jnp.float32, prefix=""):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["wi"], s["wi"] = layers.dense_init(k1, d, f, dtype=dtype)
+    p["wg"], s["wg"] = layers.dense_init(k2, d, f, dtype=dtype)
+    p["wo"], s["wo"] = layers.dense_init(k3, f, d, axes=("model", "data"),
+                                         dtype=dtype)
+    return p, s
+
+
+def glu(p, x, act: str):
+    a = layers.act_fn(act)
+    return (a(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+
+
+def moe_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    E = cfg.n_experts + cfg.expert_pad
+    d, f = cfg.d_model, cfg.moe_d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p, s = {}, {}
+    scale = 1.0 / (d ** 0.5)
+    p["router"], s["router"] = layers.dense_init(
+        k1, d, E, axes=("data", "replicated"), dtype=dtype
+    )
+    p["wi"] = jax.random.normal(k2, (E, d, f), dtype) * scale
+    p["wg"] = jax.random.normal(k3, (E, d, f), dtype) * scale
+    p["wo"] = jax.random.normal(k4, (E, f, d), dtype) * (1.0 / (f ** 0.5))
+    s["wi"] = ("model", "data", "replicated")
+    s["wg"] = ("model", "data", "replicated")
+    s["wo"] = ("model", "replicated", "data")
+    if cfg.n_shared_experts:
+        p["shared"], s["shared"] = glu_init(
+            k5, d, cfg.n_shared_experts * f, dtype=dtype
+        )
+    return p, s
+
+
+def moe(p, x, cfg: ArchConfig, *, capacity_factor: float = 1.25):
+    """Top-k MoE with sort-based capacity dispatch.
+
+    x: [B, S, d] -> [B, S, d].  Returns (out, aux_loss).
+    """
+    B, S, d = x.shape
+    E = cfg.n_experts + cfg.expert_pad
+    k = cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    if cfg.expert_pad:
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # aux load-balance loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,)).at[top_e.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+    # ---- dispatch: same sort-bucket as the assembly UC1 exchange ----
+    flat_e = top_e.reshape(T * k).astype(jnp.int32)
+    flat_w = top_p.reshape(T * k)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    C = max(128, int(capacity_factor * T * k / E) // 128 * 128)
+    perm, slot, keep, overflow = _bucket(
+        flat_e, jnp.ones((T * k,), bool), E, C
+    )
+    tok_perm = flat_t[perm]
+    buf = jnp.zeros((E * C, d), x.dtype).at[
+        jnp.where(keep, slot, E * C)
+    ].set(xt[tok_perm], mode="drop")
+    xe = buf.reshape(E, C, d)
+    # §Perf note (refuted hypothesis, EXPERIMENTS.md): pinning xe to
+    # P("model", None, None) here to force EP token routing makes GSPMD
+    # replicate the scatter instead (t_coll 20.5s -> 77.9s on qwen2-moe
+    # train_4k).  The profitable EP dispatch is the shard_map route()
+    # (core/exchange.py) — wiring it into the pjit step is the next
+    # iteration on this cell.
+    # ---- expert compute (batched GEMMs over the expert dim) ----
+    a = layers.act_fn(cfg.act)
+    h = a(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["wi"]
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(E * C, d)
+    # ---- combine: scatter back weighted by router prob ----
+    w_perm = jnp.where(keep, flat_w[perm], 0.0).astype(x.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[
+        jnp.where(keep, tok_perm, T)
+    ].add(ye[jnp.where(keep, slot, 0)] * w_perm[:, None], mode="drop")
+    if cfg.n_shared_experts:
+        out = out + glu(p["shared"], xt, cfg.act)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,38 @@
+"""Trace-time model flags (set by the dry-run / perf harness).
+
+ATTN_IMPL:
+  "naive"   — einsum + full [B,H,S,S] score matrix (the paper-faithful-
+              baseline XLA path; memory-bound at long S).
+  "chunked" — online-softmax over KV blocks in pure XLA (flash dataflow
+              without Pallas; the §Perf memory fix for CPU-lowered cells).
+  "flash"   — Pallas kernel (real TPUs only).
+
+UNROLL_LAYERS:
+  lax.scan's cost_analysis counts the body ONCE regardless of trip count;
+  unrolling the layer scan makes the dry-run's FLOP/byte totals exact at
+  the price of larger HLO.  The dry-run sets this per cell; training keeps
+  the rolled scan for compile time.
+"""
+
+ATTN_IMPL = "naive"
+UNROLL_LAYERS = False
+
+# §Perf hillclimb: sequence-split attention.  When the head count does not
+# divide the model axis, GSPMD replicates the attention einsums 16x; with
+# SEQ_SPLIT_ATTN the query/sequence dim is resharded over the model axis
+# for the attention block (and back after), removing the redundancy and
+# cutting the live score tensor by the axis size.  Requires MESH to be set
+# (the dry-run/launcher sets it before lowering).
+SEQ_SPLIT_ATTN = False
+MESH = None
+
+
+def scan_unroll(n_layers: int) -> int:
+    return n_layers if UNROLL_LAYERS else 1
+
+
+def dp_axes():
+    if MESH is None:
+        return "data"
+    names = MESH.axis_names
+    return ("pod", "data") if "pod" in names else "data"

@@ -1,0 +1,130 @@
+"""Model building blocks: norms, RoPE, initialized linears with logical
+sharding axes.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every init
+helper also produces a parallel pytree of *logical axis names* (tuples of
+strings); `logical_to_mesh` maps those to PartitionSpecs under the
+production mesh rules (DESIGN.md §5):
+
+    d_model / channel dims -> "data"  (FSDP: ZeRO-3 via GSPMD)
+    ff / heads / vocab / experts -> "model"  (TP / EP)
+    layers / small dims -> replicated
+
+The pod axis carries plain data parallelism (params replicated across
+pods, gradients all-reduced); FSDP over (pod, data) is a config flag
+(fsdp_pods) exercised in the perf iterations.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+DEFAULT_RULES = {
+    "data": "data",      # FSDP axis
+    "model": "model",    # TP / EP axis
+    "replicated": None,
+}
+
+
+def logical_to_mesh(logical: Pytree, *, fsdp_pods: bool = False) -> Pytree:
+    """Map logical axis tuples to PartitionSpecs."""
+    fsdp = ("pod", "data") if fsdp_pods else "data"
+
+    def one(axes):
+        out = []
+        for a in axes:
+            if a == "data":
+                out.append(fsdp)
+            elif a == "model":
+                out.append("model")
+            else:
+                out.append(None)
+        return P(*out)
+
+    return jax.tree.map(one, logical, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def dense_init(key, d_in: int, d_out: int, *, axes=("data", "model"),
+               scale: float | None = None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    return w, axes
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d), dtype) * 0.02
+    return w, ("model", "data")
+
+
+def norm_init(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype), ("data",)
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+    return y + b if b is not None else y
+
+
+def rope_freqs(head_dim: int, max_seq: int, theta: float = 10000.0,
+               fraction: float = 1.0):
+    """Rotary tables; fraction<1 rotates only the leading dims (GLM-style
+    2d/partial RoPE)."""
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    t = jnp.arange(max_seq, dtype=jnp.float32)
+    f = jnp.outer(t, inv)
+    return jnp.cos(f), jnp.sin(f), rot
+
+
+def apply_rope(x, cos, sin, rot: int, positions=None):
+    """x: [B, S, H, D]; positions: [B, S] (defaults to arange)."""
+    B, S, H, D = x.shape
+    if positions is None:
+        c = cos[:S][None, :, None, :]
+        s = sin[:S][None, :, None, :]
+    else:
+        c = cos[positions][:, :, None, :]
+        s = sin[positions][:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    xp = x[..., rot:]
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    y = jnp.stack([y1, y2], axis=-1).reshape(B, S, H, rot).astype(x.dtype)
+    return jnp.concatenate([y, xp], axis=-1) if rot < D else y
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def cross_entropy(logits, targets, mask):
+    """Mean token NLL.  logits [B,S,V] fp32-cast; targets [B,S] int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,95 @@
+"""Architecture registry: --arch <id> -> config, model fns, input specs.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every
+model input of the given (arch x shape) cell — the dry-run lowers against
+these without allocating anything (frontends are stubs: precomputed
+frame/patch embeddings per the assignment).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig, shape_applicable
+from . import encdec, layers, transformer
+
+ARCHS = {
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a27b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "llama3.2-3b": "repro.configs.llama32_3b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+}
+
+
+def get(arch_id: str, smoke: bool = False) -> ArchConfig:
+    mod = importlib.import_module(ARCHS[arch_id])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def model_fns(cfg: ArchConfig):
+    """(init_params, forward, loss_fn, init_decode_state, decode_step)."""
+    mod = encdec if cfg.family == "encdec" else transformer
+    return {
+        "init_params": mod.init_params,
+        "forward": mod.forward,
+        "loss_fn": mod.loss_fn,
+        "init_decode_state": mod.init_decode_state,
+        "decode_step": mod.decode_step,
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for one (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "decode":
+        return {"tokens": tok(B, 1)}
+    if cfg.family == "encdec":
+        # audio frames fill the encoder; text decodes against them.
+        sa = min(S, 8 * cfg.enc_max_seq)
+        st = max(128, min(S, 4096))
+        return {
+            "frontend": jax.ShapeDtypeStruct((B, min(sa, cfg.enc_max_seq),
+                                              cfg.d_model), jnp.bfloat16),
+            "tokens": tok(B, st),
+        }
+    if cfg.frontend == "vision":
+        nf = cfg.n_frontend_tokens
+        return {
+            "frontend": jax.ShapeDtypeStruct((B, nf, cfg.d_model), jnp.bfloat16),
+            "tokens": tok(B, S - nf),
+        }
+    return {"tokens": tok(B, S)}
+
+
+def smoke_batch(cfg: ArchConfig, batch: int = 2, seq: int = 32, seed: int = 0):
+    """Concrete small inputs for CPU smoke tests."""
+    rng = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(rng)
+    out = {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        out["frontend"] = jax.random.normal(
+            k2, (batch, cfg.enc_max_seq, cfg.d_model), jnp.float32
+        )
+    elif cfg.frontend == "vision":
+        out["frontend"] = jax.random.normal(
+            k2, (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def cells(arch_id: str):
+    """All applicable (shape_name, ShapeConfig) cells for an arch."""
+    return [
+        (name, sc) for name, sc in SHAPES.items()
+        if shape_applicable(arch_id, name)
+    ]

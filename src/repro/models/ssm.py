@@ -1,0 +1,245 @@
+"""Sequence mixers for the sub-quadratic archs: Mamba-2 SSD (zamba2) and
+xLSTM cells (mLSTM matrix memory + sLSTM scalar memory).
+
+The chunked SSD here is the pure-jnp mirror of kernels/ssd_scan.py (same
+math, validated against the same oracle) — it is the dry-run/XLA path; the
+Pallas kernel takes over on real TPUs.  Chunking turns the recurrence into
+dense intra-chunk einsums (MXU work) plus a tiny inter-chunk lax.scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import layers
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (scalar-decay SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in = 2 * d
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["win"], s["win"] = layers.dense_init(ks[0], d, d_in, dtype=dtype)
+    p["wb"], s["wb"] = layers.dense_init(ks[1], d, H * N, dtype=dtype)
+    p["wc"], s["wc"] = layers.dense_init(ks[2], d, H * N, dtype=dtype)
+    p["wa"], s["wa"] = layers.dense_init(ks[3], d, H,
+                                         axes=("data", "replicated"), dtype=dtype)
+    p["wgate"], s["wgate"] = layers.dense_init(ks[4], d, d_in, dtype=dtype)
+    p["wout"], s["wout"] = layers.dense_init(ks[5], d_in, d,
+                                             axes=("model", "data"), dtype=dtype)
+    p["a_bias"] = jnp.zeros((H,), dtype)
+    s["a_bias"] = ("replicated",)
+    return p, s
+
+
+def ssd_chunked(x, a, b, c, *, chunk: int = 128):
+    """Chunked SSD scan (jnp).  x:[B,S,H,P] a:[B,S,H] b,c:[B,S,H,N]."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    assert S % Q == 0, (S, Q)
+    xq = x.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    aq = a.reshape(B, nc, Q, H).astype(jnp.float32)
+    bq = b.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    cq = c.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    cum = jnp.cumsum(aq, axis=2)  # [B,nc,Q,H]
+    # intra-chunk ('g' indexes chunks; 'n' is the state dim)
+    w = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,nc,Q,S,H]
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    cb = jnp.einsum("bgthn,bgshn->bgtsh", cq, bq)
+    mix = cb * w * tri[None, None, :, :, None]
+    y_intra = jnp.einsum("bgtsh,bgshp->bgthp", mix, xq)
+    # chunk-final states
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,Q,H]
+    upd = jnp.einsum("bgqhp,bgqhn->bghpn", xq * tail[..., None], bq)
+    total = jnp.exp(cum[:, :, -1, :])  # [B,nc,H]
+
+    def scan_step(state, inp):
+        upd_i, total_i = inp  # [B,H,P,N], [B,H]
+        new = state * total_i[:, :, None, None] + upd_i
+        return new, state  # emit the state BEFORE this chunk
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_step, state0,
+        (jnp.moveaxis(upd, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B,nc,H,P,N]
+    decay_in = jnp.exp(cum)  # [B,nc,Q,H]
+    y_state = jnp.einsum("bghpn,bgqhn->bgqhp", prev_states, cq) * (
+        decay_in[..., None]
+    )
+    y = (y_intra + y_state).reshape(B, S, H, P)
+    return y.astype(x.dtype)
+
+
+class SSMState(NamedTuple):
+    state: jnp.ndarray  # [B, H, P, N] float32
+
+
+def mamba2_block(p, x, cfg: ArchConfig, *, chunk: int = 128):
+    """Full-sequence Mamba-2 mixer (train/prefill)."""
+    B, S, d = x.shape
+    d_in = 2 * d
+    H = d_in // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    xin = (x @ p["win"]).reshape(B, S, H, P)
+    bmat = (x @ p["wb"]).reshape(B, S, H, N)
+    cmat = (x @ p["wc"]).reshape(B, S, H, N)
+    a = -jax.nn.softplus((x @ p["wa"]) + p["a_bias"])  # log-decay < 0
+    y = ssd_chunked(xin, a, bmat, cmat, chunk=chunk)
+    gate = jax.nn.silu(x @ p["wgate"]).reshape(B, S, H, P)
+    return ((y * gate).reshape(B, S, d_in)) @ p["wout"]
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int) -> SSMState:
+    d_in = 2 * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return SSMState(
+        state=jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    )
+
+
+def mamba2_step(p, x, cfg: ArchConfig, st: SSMState):
+    """One-token decode.  x: [B, 1, d]."""
+    B, S, d = x.shape
+    d_in = 2 * d
+    H = d_in // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    xin = (x @ p["win"]).reshape(B, H, P)
+    bmat = (x @ p["wb"]).reshape(B, H, N)
+    cmat = (x @ p["wc"]).reshape(B, H, N)
+    a = -jax.nn.softplus((x @ p["wa"]) + p["a_bias"]).reshape(B, H)
+    decay = jnp.exp(a.astype(jnp.float32))
+    new_state = st.state * decay[:, :, None, None] + (
+        xin.astype(jnp.float32)[:, :, :, None] * bmat.astype(jnp.float32)[:, :, None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, cmat.astype(jnp.float32))
+    gate = jax.nn.silu(x @ p["wgate"]).reshape(B, H, P)
+    out = (y.astype(x.dtype) * gate).reshape(B, 1, d_in) @ p["wout"]
+    return out, SSMState(state=new_state)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) + sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    for name, kk in zip(("wq", "wk", "wv"), ks[:3]):
+        p[name], s[name] = layers.dense_init(kk, d, d, dtype=dtype)
+    p["wif"], s["wif"] = layers.dense_init(ks[3], d, 2 * H,
+                                           axes=("data", "replicated"), dtype=dtype)
+    p["wo"], s["wo"] = layers.dense_init(ks[4], d, d, axes=("model", "data"),
+                                         dtype=dtype)
+    p["wog"], s["wog"] = layers.dense_init(ks[5], d, d, dtype=dtype)
+    return p, s
+
+
+def mlstm_block(p, x, cfg: ArchConfig, *, chunk: int = 128):
+    """mLSTM with sigmoid forget gates via the SSD machinery: the matrix
+    memory C_t = f_t C_{t-1} + i_t v_t k_t^T is an SSD recurrence with
+    P=value dim, N=key dim, decay log f_t, input i_t v_t, B=k_t."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    q = (x @ p["wq"]).reshape(B, S, H, hd) / (hd ** 0.5)
+    k = (x @ p["wk"]).reshape(B, S, H, hd)
+    v = (x @ p["wv"]).reshape(B, S, H, hd)
+    gif = x @ p["wif"]
+    i_gate = jax.nn.sigmoid(gif[..., :H])          # [B,S,H]
+    log_f = jax.nn.log_sigmoid(gif[..., H:].astype(jnp.float32))
+    y = ssd_chunked(v * i_gate[..., None], log_f, k, q, chunk=chunk)
+    og = jax.nn.sigmoid(x @ p["wog"])
+    return (y.reshape(B, S, d) * og) @ p["wo"]
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int) -> SSMState:
+    hd = cfg.d_model // cfg.n_heads
+    return SSMState(
+        state=jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32)
+    )
+
+
+def mlstm_step(p, x, cfg: ArchConfig, st: SSMState):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    q = (x @ p["wq"]).reshape(B, H, hd) / (hd ** 0.5)
+    k = (x @ p["wk"]).reshape(B, H, hd)
+    v = (x @ p["wv"]).reshape(B, H, hd)
+    gif = (x @ p["wif"]).reshape(B, 2 * H)
+    i_gate = jax.nn.sigmoid(gif[:, :H])
+    f_gate = jax.nn.sigmoid(gif[:, H:]).astype(jnp.float32)
+    new_state = st.state * f_gate[:, :, None, None] + (
+        (v * i_gate[..., None]).astype(jnp.float32)[:, :, :, None]
+        * k.astype(jnp.float32)[:, :, None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, q.astype(jnp.float32))
+    og = jax.nn.sigmoid(x @ p["wog"]).reshape(B, H, hd)
+    out = (y.astype(x.dtype) * og).reshape(B, 1, d) @ p["wo"]
+    return out, SSMState(state=new_state)
+
+
+def slstm_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    p, s = {}, {}
+    p["wx"], s["wx"] = layers.dense_init(ks[0], d, 4 * d, dtype=dtype)
+    p["wh"], s["wh"] = layers.dense_init(ks[1], d, 4 * d, dtype=dtype)
+    return p, s
+
+
+def slstm_block(p, x, cfg: ArchConfig):
+    """sLSTM: scalar-memory recurrent cell, scanned over time."""
+    B, S, d = x.shape
+    gx = x @ p["wx"]  # [B,S,4d]
+
+    def step(carry, g_t):
+        h, c = carry
+        g = g_t + h @ p["wh"]
+        i, f, z, o = jnp.split(g, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(z)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((B, d), x.dtype)
+    (_, _), ys = jax.lax.scan(step, (h0, h0), jnp.moveaxis(gx, 1, 0))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+class SLSTMState(NamedTuple):
+    h: jnp.ndarray
+    c: jnp.ndarray
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int) -> SLSTMState:
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return SLSTMState(h=z, c=z)
+
+
+def slstm_step(p, x, cfg: ArchConfig, st: SLSTMState):
+    B, S, d = x.shape
+    g = (x.reshape(B, d) @ p["wx"]) + st.h.astype(x.dtype) @ p["wh"]
+    i, f, z, o = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    c = jax.nn.sigmoid(f) * st.c + jax.nn.sigmoid(i) * jnp.tanh(z)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h.astype(x.dtype).reshape(B, 1, d), SLSTMState(h=h, c=c)

@@ -1,0 +1,402 @@
+"""Decoder stacks for all assigned families: dense, MoE, VLM, hybrid
+(zamba2), and xLSTM — with scan-over-layers + remat (bounded HLO at 512
+devices) and cached decode.
+
+Entry points (used by registry / launch / serving):
+  init_params(cfg, key)          -> (params, logical_specs)
+  forward(cfg, params, batch)    -> (logits, aux_loss)
+  loss_fn(cfg, params, batch)    -> scalar loss
+  init_decode_state(cfg, B, max) -> state pytree
+  decode_step(cfg, params, state, tokens) -> (logits, state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import attention, ffn, flags, layers, ssm
+
+
+def _stacked_init(fn, key, n: int):
+    """vmap an init over n layer keys; specs gain a leading 'layers' axis."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: fn(k)[0])(keys)
+    _, specs = fn(keys[0])
+    specs = jax.tree.map(
+        lambda a: ("replicated",) + a, specs,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    return params, specs
+
+
+def _layer_init(cfg: ArchConfig, dtype):
+    def one(key):
+        ks = jax.random.split(key, 4)
+        p, s = {}, {}
+        p["attn"], s["attn"] = attention.init(ks[0], cfg, dtype)
+        p["ln1"], s["ln1"] = layers.norm_init(cfg.d_model, dtype)
+        p["ln2"], s["ln2"] = layers.norm_init(cfg.d_model, dtype)
+        if cfg.is_moe:
+            p["moe"], s["moe"] = ffn.moe_init(ks[1], cfg, dtype)
+            if cfg.parallel_dense_ffn and cfg.d_ff:
+                p["mlp"], s["mlp"] = ffn.glu_init(ks[2], cfg.d_model, cfg.d_ff,
+                                                  dtype)
+        elif cfg.d_ff:
+            p["mlp"], s["mlp"] = ffn.glu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        return p, s
+
+    return one
+
+
+def _mamba_layer_init(cfg: ArchConfig, dtype):
+    def one(key):
+        p, s = {}, {}
+        p["mixer"], s["mixer"] = ssm.mamba2_init(key, cfg, dtype)
+        p["ln"], s["ln"] = layers.norm_init(cfg.d_model, dtype)
+        return p, s
+
+    return one
+
+
+def _xlstm_pair_init(cfg: ArchConfig, dtype):
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        p, s = {}, {}
+        p["m"], s["m"] = ssm.mlstm_init(k1, cfg, dtype)
+        p["s"], s["s"] = ssm.slstm_init(k2, cfg, dtype)
+        p["ln_m"], s["ln_m"] = layers.norm_init(cfg.d_model, dtype)
+        p["ln_s"], s["ln_s"] = layers.norm_init(cfg.d_model, dtype)
+        return p, s
+
+    return one
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    vpad = layers.pad_to_multiple(cfg.vocab, 16)
+    p["embed"], s["embed"] = layers.embed_init(ks[0], vpad, cfg.d_model, dtype)
+    p["ln_f"], s["ln_f"] = layers.norm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"], s["lm_head"] = layers.dense_init(
+            ks[1], cfg.d_model, vpad, axes=("data", "model"), dtype=dtype
+        )
+    if cfg.family == "hybrid":
+        ae = cfg.attn_every
+        n_groups, rem = divmod(cfg.n_layers, ae)
+        stack = _stacked_init(_mamba_layer_init(cfg, dtype), ks[2], n_groups * ae)
+        p["mamba"], s["mamba"] = (
+            jax.tree.map(lambda a: a.reshape((n_groups, ae) + a.shape[1:]),
+                         stack[0]),
+            jax.tree.map(lambda a: ("replicated",) + a, stack[1],
+                         is_leaf=lambda x: isinstance(x, tuple)),
+        )
+        if rem:
+            p["mamba_tail"], s["mamba_tail"] = _stacked_init(
+                _mamba_layer_init(cfg, dtype), ks[3], rem
+            )
+        # ONE shared attention+MLP block (weight-tied across invocations)
+        import dataclasses as _dc
+
+        shared_cfg = _dc.replace(cfg, n_experts=0, top_k=0, family="dense")
+        p["shared"], s["shared"] = _layer_init(shared_cfg, dtype)(ks[4])
+    elif cfg.xlstm:
+        assert cfg.n_layers % 2 == 0
+        p["pairs"], s["pairs"] = _stacked_init(
+            _xlstm_pair_init(cfg, dtype), ks[2], cfg.n_layers // 2
+        )
+    else:
+        p["layers"], s["layers"] = _stacked_init(
+            _layer_init(cfg, dtype), ks[2], cfg.n_layers
+        )
+    if cfg.frontend:
+        # stub frontend projection (precomputed embeddings -> d_model)
+        p["frontend"], s["frontend"] = layers.dense_init(
+            ks[5], cfg.d_model, cfg.d_model, dtype=dtype
+        )
+    return p, s
+
+
+def _rope(cfg: ArchConfig, max_len: int):
+    if cfg.rope_fraction <= 0:
+        return None
+    cos, sin, rot = layers.rope_freqs(cfg.hd, max_len, cfg.rope_theta,
+                                      cfg.rope_fraction)
+    return cos, sin, rot
+
+
+def _dense_layer_fwd(cfg: ArchConfig, use_kernel: bool, rope):
+    def body(carry, lp):
+        h, aux = carry
+        a = attention.full_attention(
+            lp["attn"], layers.rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, rope,
+            use_kernel=use_kernel,
+        )
+        h = h + a
+        hn = layers.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            mo, a_loss = ffn.moe(lp["moe"], hn, cfg)
+            h = h + mo
+            aux = aux + a_loss
+            if cfg.parallel_dense_ffn and cfg.d_ff:
+                h = h + ffn.glu(lp["mlp"], hn, cfg.act)
+        elif cfg.d_ff:
+            h = h + ffn.glu(lp["mlp"], hn, cfg.act)
+        return (h, aux), None
+
+    return body
+
+
+def forward(cfg: ArchConfig, params, batch, *, use_kernel: bool = False,
+            remat: bool = True):
+    """Training/prefill forward -> (logits [B,S,Vpad], aux_loss)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = params["embed"][tokens]
+    if cfg.frontend:
+        fe = batch["frontend"] @ params["frontend"]
+        h = jnp.concatenate([fe.astype(h.dtype), h], axis=1)
+    S_all = h.shape[1]
+    aux = jnp.float32(0.0)
+    if cfg.family == "hybrid":
+        h, aux = _hybrid_forward(cfg, params, h, use_kernel, remat)
+    elif cfg.xlstm:
+        h, aux = _xlstm_forward(cfg, params, h, remat)
+    else:
+        body = _dense_layer_fwd(cfg, use_kernel, _rope(cfg, S_all))
+        f = jax.checkpoint(body) if remat else body
+        (h, aux), _ = jax.lax.scan(f, (h, aux), params["layers"],
+                                   unroll=flags.scan_unroll(cfg.n_layers))
+    h = layers.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    if cfg.frontend:
+        h = h[:, -S:]  # logits over the text positions only
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+    logits = h @ head
+    return logits, aux
+
+
+def _hybrid_forward(cfg: ArchConfig, params, h, use_kernel, remat):
+    """zamba2: groups of mamba layers + the shared attention block."""
+    aux = jnp.float32(0.0)
+    rope = _rope(cfg, h.shape[1])
+    shared = params["shared"]
+
+    def mamba_body(carry, lp):
+        hh = carry
+        hh = hh + ssm.mamba2_block(
+            lp["mixer"], layers.rmsnorm(hh, lp["ln"], cfg.norm_eps), cfg
+        )
+        return hh, None
+
+    mb = jax.checkpoint(mamba_body) if remat else mamba_body
+
+    def group_body(carry, gp):
+        hh = carry
+        hh, _ = jax.lax.scan(mb, hh, gp)
+        a = attention.full_attention(
+            shared["attn"], layers.rmsnorm(hh, shared["ln1"], cfg.norm_eps),
+            cfg, rope, use_kernel=use_kernel,
+        )
+        hh = hh + a
+        hh = hh + ffn.glu(
+            shared["mlp"], layers.rmsnorm(hh, shared["ln2"], cfg.norm_eps),
+            cfg.act,
+        )
+        return hh, None
+
+    gb = jax.checkpoint(group_body) if remat else group_body
+    n_groups = cfg.n_layers // cfg.attn_every
+    h, _ = jax.lax.scan(gb, h, params["mamba"],
+                        unroll=flags.scan_unroll(n_groups))
+    if "mamba_tail" in params:
+        h, _ = jax.lax.scan(mb, h, params["mamba_tail"])
+    return h, aux
+
+
+def _xlstm_forward(cfg: ArchConfig, params, h, remat):
+    def pair_body(carry, lp):
+        hh = carry
+        hh = hh + ssm.mlstm_block(
+            lp["m"], layers.rmsnorm(hh, lp["ln_m"], cfg.norm_eps), cfg
+        )
+        hh = hh + ssm.slstm_block(
+            lp["s"], layers.rmsnorm(hh, lp["ln_s"], cfg.norm_eps), cfg
+        )
+        return hh, None
+
+    pb = jax.checkpoint(pair_body) if remat else pair_body
+    h, _ = jax.lax.scan(pb, h, params["pairs"],
+                        unroll=flags.scan_unroll(cfg.n_layers // 2))
+    return h, jnp.float32(0.0)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, use_kernel: bool = False,
+            aux_weight: float = 0.01):
+    logits, aux = forward(cfg, params, batch, use_kernel=use_kernel)
+    tokens = batch["tokens"]
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1
+    )
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], jnp.float32),
+         jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1
+    )
+    ce = layers.cross_entropy(logits, targets, mask)
+    return ce + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    if cfg.family == "hybrid":
+        ae = cfg.attn_every
+        n_groups, rem = divmod(cfg.n_layers, ae)
+        mk_ssm = lambda n: jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape),
+            ssm.mamba2_init_state(cfg, batch),
+        )
+        return {
+            "mamba": jax.tree.map(
+                lambda a: a.reshape((n_groups, ae) + a.shape[1:]),
+                mk_ssm(n_groups * ae),
+            ),
+            "mamba_tail": mk_ssm(rem) if rem else None,
+            "shared_cache": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape)
+                if a.ndim else jnp.broadcast_to(a, (n_groups,)),
+                attention.init_cache(cfg, batch, max_len, dtype),
+            ),
+            "pos": jnp.int32(0),
+        }
+    if cfg.xlstm:
+        n_pairs = cfg.n_layers // 2
+        stackn = lambda st: jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_pairs,) + a.shape), st
+        )
+        return {
+            "m": stackn(ssm.mlstm_init_state(cfg, batch)),
+            "s": stackn(ssm.slstm_init_state(cfg, batch)),
+            "pos": jnp.int32(0),
+        }
+    cache = attention.init_cache(cfg, batch, max_len, dtype)
+    return {
+        "caches": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape)
+            if a.ndim else jnp.broadcast_to(a, (cfg.n_layers,)),
+            cache,
+        ),
+        "pos": jnp.int32(0),
+    }
+
+
+def decode_step(cfg: ArchConfig, params, state, tokens):
+    """One-token decode.  tokens: [B, 1] -> (logits [B, 1, Vpad], state)."""
+    h = params["embed"][tokens]
+    rope = _rope(cfg, cfg.max_seq)
+    if cfg.family == "hybrid":
+        return _hybrid_decode(cfg, params, state, h, rope)
+    if cfg.xlstm:
+        return _xlstm_decode(cfg, params, state, h)
+
+    def body(h, xs):
+        lp, cache_l = xs
+        cache = attention.KVCache(
+            k=cache_l.k, v=cache_l.v, pos=state["pos"]
+        )
+        a, new_cache = attention.decode_attention(
+            lp["attn"], layers.rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, rope,
+            cache,
+        )
+        h = h + a
+        hn = layers.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            mo, _ = ffn.moe(lp["moe"], hn, cfg)
+            h = h + mo
+            if cfg.parallel_dense_ffn and cfg.d_ff:
+                h = h + ffn.glu(lp["mlp"], hn, cfg.act)
+        elif cfg.d_ff:
+            h = h + ffn.glu(lp["mlp"], hn, cfg.act)
+        return h, attention.KVCache(k=new_cache.k, v=new_cache.v,
+                                    pos=new_cache.pos)
+
+    h, new_caches = jax.lax.scan(body, h, (params["layers"], state["caches"]),
+                                 unroll=flags.scan_unroll(cfg.n_layers))
+    h = layers.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head, {"caches": new_caches, "pos": state["pos"] + 1}
+
+
+def _hybrid_decode(cfg, params, state, h, rope):
+    shared = params["shared"]
+
+    def mamba_body(hh, xs):
+        lp, st = xs
+        out, new_st = ssm.mamba2_step(
+            lp["mixer"], layers.rmsnorm(hh, lp["ln"], cfg.norm_eps), cfg, st
+        )
+        return hh + out, new_st
+
+    def group_body(hh, xs):
+        gp, gst, cache_l = xs
+        hh, new_gst = jax.lax.scan(mamba_body, hh, (gp, gst))
+        cache = attention.KVCache(k=cache_l.k, v=cache_l.v, pos=state["pos"])
+        a, new_cache = attention.decode_attention(
+            shared["attn"], layers.rmsnorm(hh, shared["ln1"], cfg.norm_eps),
+            cfg, rope, cache,
+        )
+        hh = hh + a
+        hh = hh + ffn.glu(
+            shared["mlp"], layers.rmsnorm(hh, shared["ln2"], cfg.norm_eps),
+            cfg.act,
+        )
+        return hh, (new_gst, attention.KVCache(
+            k=new_cache.k, v=new_cache.v, pos=new_cache.pos))
+
+    h, (new_mamba, new_caches) = jax.lax.scan(
+        group_body, h,
+        (params["mamba"], state["mamba"], state["shared_cache"]),
+    )
+    new_tail = state["mamba_tail"]
+    if "mamba_tail" in params:
+        h, new_tail = jax.lax.scan(
+            mamba_body, h, (params["mamba_tail"], state["mamba_tail"])
+        )
+    h = layers.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head, {
+        "mamba": new_mamba,
+        "mamba_tail": new_tail,
+        "shared_cache": new_caches,
+        "pos": state["pos"] + 1,
+    }
+
+
+def _xlstm_decode(cfg, params, state, h):
+    def pair_body(hh, xs):
+        lp, m_st, s_st = xs
+        out, new_m = ssm.mlstm_step(
+            lp["m"], layers.rmsnorm(hh, lp["ln_m"], cfg.norm_eps), cfg, m_st
+        )
+        hh = hh + out
+        out, new_s = ssm.slstm_step(
+            lp["s"], layers.rmsnorm(hh, lp["ln_s"], cfg.norm_eps), cfg, s_st
+        )
+        return hh + out, (new_m, new_s)
+
+    h, (new_m, new_s) = jax.lax.scan(
+        pair_body, h, (params["pairs"], state["m"], state["s"])
+    )
+    h = layers.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head, {"m": new_m, "s": new_s, "pos": state["pos"] + 1}

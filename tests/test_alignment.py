@@ -1,0 +1,94 @@
+"""Aligner correctness vs simulator ground truth."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import alignment
+from repro.core.types import ContigSet, ReadSet
+from repro.data import mgsim
+from helpers import rc_np
+
+
+def contigs_from_genome(genome, Lmax=2048, cap=8):
+    bases = np.full((cap, Lmax), 4, np.uint8)
+    bases[0, : len(genome)] = genome
+    return ContigSet(
+        bases=jnp.asarray(bases),
+        lengths=jnp.asarray(np.array([len(genome)] + [0] * (cap - 1), np.int32)),
+        depths=jnp.ones((cap,), jnp.float32),
+    )
+
+
+def test_align_perfect_reads_to_genome_contig():
+    genome, reads, truth = mgsim.single_genome_reads(11, genome_len=800, coverage=8)
+    contigs = contigs_from_genome(genome)
+    idx = alignment.build_seed_index(
+        contigs, jnp.ones((contigs.capacity,), bool), seed_len=21, capacity=1 << 12
+    )
+    al = alignment.align_reads(reads, contigs, idx, seed_len=21)
+    contig = np.asarray(al.contig[:, 0])
+    cstart = np.asarray(al.cstart[:, 0])
+    orient = np.asarray(al.orient[:, 0])
+    matches = np.asarray(al.matches[:, 0])
+    overlap = np.asarray(al.overlap[:, 0])
+    aligned = contig >= 0
+    assert aligned.mean() > 0.95, f"only {aligned.mean():.2%} aligned"
+    # perfect reads: all matched positions
+    assert (matches[aligned] == overlap[aligned]).all()
+    # verify coordinates against the ground truth for fwd-truth reads
+    rl = int(reads.lengths[0])
+    bases = np.asarray(reads.bases)
+    g = np.asarray(genome)
+    for r in np.nonzero(aligned)[0][:100]:
+        s, o = cstart[r], orient[r]
+        if o == 0:
+            np.testing.assert_array_equal(g[s : s + rl], bases[r, :rl])
+        else:
+            np.testing.assert_array_equal(g[s : s + rl], rc_np(bases[r, :rl]))
+
+
+def test_align_with_errors_tolerates_mismatches():
+    genome, reads, _ = mgsim.single_genome_reads(
+        12, genome_len=600, coverage=6, err_rate=0.01
+    )
+    contigs = contigs_from_genome(genome)
+    idx = alignment.build_seed_index(
+        contigs, jnp.ones((contigs.capacity,), bool), seed_len=19, capacity=1 << 12
+    )
+    al = alignment.align_reads(reads, contigs, idx, seed_len=19, min_frac=0.9)
+    aligned = np.asarray(al.contig[:, 0]) >= 0
+    assert aligned.mean() > 0.85
+
+
+def test_splint_read_gets_two_hits():
+    """A read spanning the junction of two adjacent contigs must report both
+    (scaffolding's splint signal)."""
+    rng = np.random.default_rng(13)
+    g = mgsim.random_genome(rng, 400)
+    c1, c2 = g[:200], g[200:]
+    Lmax, cap = 512, 8
+    bases = np.full((cap, Lmax), 4, np.uint8)
+    bases[0, :200] = c1
+    bases[1, :200] = c2
+    contigs = ContigSet(
+        bases=jnp.asarray(bases),
+        lengths=jnp.asarray(np.array([200, 200] + [0] * 6, np.int32)),
+        depths=jnp.ones((cap,), jnp.float32),
+    )
+    idx = alignment.build_seed_index(
+        contigs, jnp.ones((cap,), bool), seed_len=21, capacity=1 << 12
+    )
+    # read straddling the junction: 30 bases on c1, 30 on c2
+    read = g[170:230]
+    rbases = np.full((2, 60), 4, np.uint8)
+    rbases[0] = read
+    rbases[1] = rc_np(read)
+    reads = ReadSet(
+        bases=jnp.asarray(rbases),
+        lengths=jnp.asarray(np.array([60, 60], np.int32)),
+        mate=jnp.asarray(np.array([-1, -1], np.int32)),
+        insert_size=180,
+    )
+    al = alignment.align_reads(reads, contigs, idx, seed_len=21, stride=8)
+    for r in range(2):
+        hits = set(int(c) for c in np.asarray(al.contig[r]) if c >= 0)
+        assert hits == {0, 1}, f"read {r}: expected both contigs, got {hits}"

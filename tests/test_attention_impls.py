@@ -1,0 +1,51 @@
+"""Attention implementation equivalence: naive vs chunked XLA paths."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import attention, flags
+from repro.configs.base import ArchConfig
+
+
+def mini_cfg(window=0):
+    return ArchConfig(
+        name="mini", family="dense", n_layers=1, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=128, window=window, max_seq=2048,
+    )
+
+
+@pytest.mark.parametrize("window", [0, 256])
+def test_chunked_equals_naive(window):
+    cfg = mini_cfg(window)
+    params, _ = attention.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1024, 64), jnp.float32)
+    rope = None
+    old = flags.ATTN_IMPL
+    try:
+        flags.ATTN_IMPL = "naive"
+        naive = attention.full_attention(params, x, cfg, rope)
+        flags.ATTN_IMPL = "chunked"
+        chunked = attention.full_attention(params, x, cfg, rope)
+    finally:
+        flags.ATTN_IMPL = old
+    np.testing.assert_allclose(
+        np.asarray(naive), np.asarray(chunked), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_chunked_noncausal_equals_naive():
+    cfg = mini_cfg()
+    params, _ = attention.init(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 1024, 64), jnp.float32)
+    old = flags.ATTN_IMPL
+    try:
+        flags.ATTN_IMPL = "naive"
+        naive = attention.full_attention(params, x, cfg, None, causal=False)
+        flags.ATTN_IMPL = "chunked"
+        chunked = attention.full_attention(params, x, cfg, None, causal=False)
+    finally:
+        flags.ATTN_IMPL = old
+    np.testing.assert_allclose(
+        np.asarray(naive), np.asarray(chunked), rtol=2e-4, atol=2e-4
+    )

@@ -1,0 +1,122 @@
+"""K-mer analysis + de Bruijn traversal: end-to-end contig correctness."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dbg, kmer_analysis
+from repro.core.kmer_analysis import ExtensionPolicy
+from repro.data import mgsim
+from helpers import contig_list, matches_genome, genome_coverage, rc_np, seq_str
+
+
+def assemble_contigs(reads, k, capacity=1 << 14, contig_cap=256, max_len=2048,
+                     policy=ExtensionPolicy(), min_count=2):
+    kset = kmer_analysis.analyze(reads, k=k, capacity=capacity,
+                                 min_count=min_count, policy=policy)
+    index = dbg.build_index(kset)
+    trav = dbg.traverse(kset, index, k=k, contig_cap=contig_cap, max_len=max_len)
+    return kset, index, trav
+
+
+def test_kmer_counts_match_oracle():
+    genome, reads, _ = mgsim.single_genome_reads(0, genome_len=300, coverage=15)
+    k = 17
+    kset = kmer_analysis.analyze(reads, k=k, capacity=1 << 12, min_count=2)
+    used = np.asarray(kset.used)
+    n = used.sum()
+    # oracle: count canonical kmers with python dict
+    from collections import Counter
+    cnt = Counter()
+    bases = np.asarray(reads.bases)
+    for r in range(bases.shape[0]):
+        s = seq_str(bases[r])
+        for j in range(len(s) - k + 1):
+            sub = s[j : j + k]
+            rcs = seq_str(rc_np(np.asarray([("ACGTN".index(c)) for c in sub], dtype=np.uint8)))
+            cnt[min(sub, rcs)] += 1
+    expect = {s for s, c in cnt.items() if c >= 2}
+    assert n == len(expect)
+    # counts agree
+    from repro.core import kmer as km
+    hi, lo = np.asarray(kset.hi), np.asarray(kset.lo)
+    count = np.asarray(kset.count)
+    for i in np.nonzero(used)[0][:50]:
+        s = seq_str(np.asarray(km.decode(jnp.asarray(hi[i : i + 1]), jnp.asarray(lo[i : i + 1]), k=k))[0])
+        assert cnt[s] == count[i]
+
+
+def test_single_genome_perfect_reads_one_contig():
+    genome, reads, _ = mgsim.single_genome_reads(1, genome_len=500, coverage=25)
+    _, _, trav = assemble_contigs(reads, k=21)
+    contigs = contig_list(trav.contigs, min_len=50)
+    assert len(contigs) >= 1
+    # the longest contig should essentially reconstruct the genome
+    longest = max(contigs, key=len)
+    assert matches_genome(longest, genome)
+    assert len(longest) >= 480  # ends may be trimmed by min_ext
+    # every contig is a true genome substring (no misassembly)
+    for c in contigs:
+        assert matches_genome(c, genome)
+
+
+def test_contig_coverage_with_errors():
+    genome, reads, _ = mgsim.single_genome_reads(
+        2, genome_len=600, coverage=30, err_rate=0.005
+    )
+    _, _, trav = assemble_contigs(reads, k=19, policy=ExtensionPolicy(err_rate=0.05))
+    contigs = contig_list(trav.contigs, min_len=2 * 19)
+    cov = genome_coverage(contigs, genome)
+    assert cov > 0.9, f"coverage {cov}"
+    for c in contigs:
+        assert matches_genome(c, genome), "misassembled contig"
+
+
+def test_two_genomes_no_chimeras():
+    comm = mgsim.sample_community(3, num_genomes=2, genome_len=400, abundance_sigma=0.2)
+    reads, _ = mgsim.generate_reads(4, comm, num_pairs=200, read_len=60)
+    _, _, trav = assemble_contigs(reads, k=21)
+    contigs = contig_list(trav.contigs, min_len=60)
+    assert contigs
+    for c in contigs:
+        ok = any(matches_genome(c, g) for g in comm.genomes)
+        assert ok, "chimeric contig across genomes"
+
+
+def test_adaptive_threshold_helps_high_coverage():
+    """Paper §II-C: with a fixed t_hq, very high coverage genomes fragment
+    (error extensions exceed the global threshold); the adaptive rule
+    max(t_base, e*depth) keeps them contiguous."""
+    genome, reads, _ = mgsim.single_genome_reads(
+        5, genome_len=400, coverage=300, err_rate=0.01
+    )
+    k = 19
+    # HipMer mode: fixed threshold (err_rate=0 disables depth scaling)
+    fixed = ExtensionPolicy(min_ext=2, t_base=2.0, err_rate=0.0)
+    # e must sit above the realized per-extension error rate with Poisson
+    # headroom: contradictions ~ Poisson(err*depth) spike above the mean
+    adaptive = ExtensionPolicy(min_ext=2, t_base=2.0, err_rate=0.05)
+    _, _, t_fixed = assemble_contigs(reads, k=k, policy=fixed, capacity=1 << 15)
+    _, _, t_adapt = assemble_contigs(reads, k=k, policy=adaptive, capacity=1 << 15)
+    len_fixed = sorted((len(c) for c in contig_list(t_fixed.contigs)), reverse=True)
+    len_adapt = sorted((len(c) for c in contig_list(t_adapt.contigs)), reverse=True)
+    best_fixed = len_fixed[0] if len_fixed else 0
+    best_adapt = len_adapt[0] if len_adapt else 0
+    assert best_adapt > best_fixed, (
+        f"adaptive {best_adapt} should beat fixed {best_fixed} at 300x"
+    )
+    assert best_adapt >= 350
+
+
+def test_cycle_handled():
+    """A circular genome (plasmid) forms a cycle in the DBG; the traversal
+    must cut it deterministically rather than hang or drop it."""
+    rng = np.random.default_rng(7)
+    g = mgsim.random_genome(rng, 200)
+    circular = np.concatenate([g, g[:80]])  # reads wrap the junction
+    comm = mgsim.Community(genomes=[circular], abundances=np.array([1.0]))
+    reads, _ = mgsim.generate_reads(8, comm, num_pairs=150, read_len=60)
+    _, _, trav = assemble_contigs(reads, k=21)
+    contigs = contig_list(trav.contigs, min_len=100)
+    assert contigs, "cycle dropped entirely"
+    total = sum(len(c) for c in contigs)
+    assert total >= 180

@@ -1,0 +1,102 @@
+"""Hash-table build/lookup properties (paper §II-A use cases)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dht
+
+
+def make_keys(rng, n, key_space=1 << 20):
+    """Random distinct-ish dual-lane keys with hi < 2**30 (valid kmer range)."""
+    vals = rng.integers(0, key_space, size=n, dtype=np.uint64)
+    hi = (vals >> 32).astype(np.uint32)
+    lo = (vals & 0xFFFFFFFF).astype(np.uint32)
+    return jnp.asarray(hi), jnp.asarray(lo), vals
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=200),
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_insert_then_lookup_finds_everything(n, seed):
+    rng = np.random.default_rng(seed)
+    hi, lo, vals = make_keys(rng, n)
+    valid = jnp.ones((n,), bool)
+    table, slots = dht.build(hi, lo, valid, capacity=512)
+    s = np.asarray(slots)
+    assert (s >= 0).all(), "no overflow expected at low load factor"
+    # duplicates must map to the same slot
+    by_val = {}
+    for v, si in zip(vals, s):
+        if v in by_val:
+            assert by_val[v] == si
+        by_val[v] = si
+    # lookups find the same slots
+    found = np.asarray(dht.lookup(table, hi, lo))
+    assert (found == s).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_absent_keys_not_found(seed):
+    rng = np.random.default_rng(seed)
+    hi, lo, vals = make_keys(rng, 100, key_space=1 << 16)
+    table, _ = dht.build(hi, lo, jnp.ones((100,), bool), capacity=512)
+    # query keys guaranteed absent (outside the inserted key space)
+    qv = rng.integers(1 << 17, 1 << 20, size=64, dtype=np.uint64)
+    qhi = jnp.asarray((qv >> 32).astype(np.uint32))
+    qlo = jnp.asarray((qv & 0xFFFFFFFF).astype(np.uint32))
+    found = np.asarray(dht.lookup(table, qhi, qlo))
+    assert (found == -1).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=1000))
+def test_insertion_order_independence(seed):
+    """Use-case-1 commutativity: same key set => same slot assignment set."""
+    rng = np.random.default_rng(seed)
+    hi, lo, vals = make_keys(rng, 128)
+    perm = rng.permutation(128)
+    t1, _ = dht.build(hi, lo, jnp.ones((128,), bool), capacity=512)
+    t2, _ = dht.build(hi[perm], lo[perm], jnp.ones((128,), bool), capacity=512)
+    # state may differ slot-by-slot (chaining differs), but lookups agree on
+    # membership — this is the paper's "same state up to representation"
+    f1 = np.asarray(dht.lookup(t1, hi, lo)) >= 0
+    f2 = np.asarray(dht.lookup(t2, hi, lo)) >= 0
+    assert f1.all() and f2.all()
+    assert int(t1.used.sum()) == int(t2.used.sum())
+
+
+def test_incremental_insert_dedupes():
+    hi = jnp.array([1, 2, 3], dtype=jnp.uint32)
+    lo = jnp.array([10, 20, 30], dtype=jnp.uint32)
+    table, s1 = dht.build(hi, lo, jnp.ones((3,), bool), capacity=64)
+    # second insert: one duplicate (2,20), one new (4,40)
+    hi2 = jnp.array([2, 4], dtype=jnp.uint32)
+    lo2 = jnp.array([20, 40], dtype=jnp.uint32)
+    table, s2 = dht.insert(table, hi2, lo2, jnp.ones((2,), bool))
+    assert int(s2[0]) == int(s1[1])  # dedupe to the original slot
+    assert int(table.used.sum()) == 4
+
+
+def test_high_load_factor_and_overflow():
+    rng = np.random.default_rng(0)
+    n, cap = 60, 64
+    hi, lo, _ = make_keys(rng, n, key_space=1 << 30)
+    table, slots = dht.build(hi, lo, jnp.ones((n,), bool), capacity=cap)
+    s = np.asarray(slots)
+    assert (s >= 0).all()
+    found = np.asarray(dht.lookup(table, hi, lo))
+    assert (found == s).all()
+
+
+def test_invalid_keys_ignored():
+    hi = jnp.array([1, 2], dtype=jnp.uint32)
+    lo = jnp.array([1, 2], dtype=jnp.uint32)
+    valid = jnp.array([True, False])
+    table, slots = dht.build(hi, lo, valid, capacity=16)
+    assert int(slots[1]) == -1
+    assert int(table.used.sum()) == 1
+    found = dht.lookup(table, hi, lo, valid=jnp.array([True, True]))
+    assert int(found[0]) >= 0 and int(found[1]) == -1

@@ -1,0 +1,36 @@
+"""FASTQ ingest: parse -> trim -> ReadSet roundtrip."""
+import numpy as np
+
+from repro.data import fastq
+
+
+FQ = """@r1
+ACGTACGTACGT
++
+IIIIIIIIIIII
+@r2
+TTTTCCCCGGGG
++
+IIIIIIII!!!!
+"""
+
+
+def test_parse_and_trim():
+    recs = fastq.parse_fastq(FQ)
+    assert len(recs) == 2
+    s, q = recs[0]
+    assert "".join("ACGTN"[b] for b in s) == "ACGTACGTACGT"
+    # record 2 has 4 low-quality tail bases ('!' = q0)
+    s2, q2 = fastq.quality_trim(*recs[1])
+    assert len(s2) == 8
+
+
+def test_to_readset():
+    rs = fastq.to_readset(fastq.parse_fastq(FQ), min_len=4)
+    assert rs.num_reads == 2
+    assert int(rs.lengths[0]) == 12
+    assert int(rs.lengths[1]) == 8
+    assert int(rs.mate[0]) == 1 and int(rs.mate[1]) == 0
+    # fasta rendering roundtrip
+    out = fastq.write_fasta([np.asarray(rs.bases[0, :12])])
+    assert "ACGTACGTACGT" in out

@@ -1,0 +1,125 @@
+"""chain.py, cc.py, bubble/pruning, hmm: unit + property tests."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cc, chain, hmm
+from repro.data import mgsim
+
+
+# ---------------- chain formation ----------------
+def oracle_chains(pred):
+    """Sequential oracle: walk pred pointers to the head."""
+    n = len(pred)
+    head = np.zeros(n, int)
+    dist = np.zeros(n, int)
+    for i in range(n):
+        seen = set()
+        j = i
+        d = 0
+        while pred[j] != -1 and j not in seen:
+            seen.add(j)
+            j = pred[j]
+            d += 1
+        head[i] = j
+        dist[i] = d
+    return head, dist
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=120), st.integers(0, 10_000))
+def test_form_chains_matches_oracle_on_random_paths(n, seed):
+    rng = np.random.default_rng(seed)
+    # random functional pred graph with <=1 pred per node and no sharing:
+    # build by chaining a random permutation into segments
+    perm = rng.permutation(n)
+    pred = np.full(n, -1, np.int64)
+    for i in range(1, n):
+        if rng.random() < 0.7:  # extend current chain
+            pred[perm[i]] = perm[i - 1]
+    head, dist = oracle_chains(pred)
+    got = chain.form_chains(jnp.asarray(pred, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got.head), head)
+    np.testing.assert_array_equal(np.asarray(got.dist), dist)
+    assert not np.asarray(got.was_cycle).any()
+
+
+def test_form_chains_cycle_broken_at_min():
+    # 0 -> 1 -> 2 -> 0 cycle plus tailless chain 3 -> 4
+    pred = jnp.asarray([2, 0, 1, -1, 3], jnp.int32)
+    got = chain.form_chains(pred)
+    assert np.asarray(got.was_cycle)[:3].all()
+    # head of the cycle is its min-index node, 0
+    assert set(np.asarray(got.head)[:3]) == {0}
+    dists = sorted(np.asarray(got.dist)[:3].tolist())
+    assert dists == [0, 1, 2]
+    assert int(got.head[4]) == 3
+
+
+# ---------------- connected components ----------------
+def oracle_cc(n, edges):
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in edges:
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    # min label per component
+    comp = {}
+    out = []
+    for i in range(n):
+        r = find(i)
+        comp.setdefault(r, min(j for j in range(n) if find(j) == r))
+        out.append(comp[r])
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 60), st.integers(0, 10_000))
+def test_cc_matches_union_find_oracle(n, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.integers(0, 2 * n)
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    labels = cc.connected_components(
+        jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32),
+        jnp.ones((int(m),), bool), n,
+    )
+    expect = oracle_cc(n, list(zip(u.tolist(), v.tolist())))
+    assert np.asarray(labels).tolist() == expect
+
+
+def test_cc_respects_valid_mask():
+    u = jnp.asarray([0, 2], jnp.int32)
+    v = jnp.asarray([1, 3], jnp.int32)
+    valid = jnp.asarray([True, False])
+    labels = np.asarray(cc.connected_components(u, v, valid, 4))
+    assert labels[0] == labels[1]
+    assert labels[2] != labels[0] and labels[3] == 3
+
+
+# ---------------- profile HMM ----------------
+def test_hmm_flags_planted_region_and_not_random():
+    rng = np.random.default_rng(3)
+    rrna = mgsim.random_genome(rng, 100)
+    profile = hmm.build_profile([rrna])
+    # contig containing a 2%-mutated copy
+    host = mgsim.random_genome(rng, 300)
+    mut = rrna.copy()
+    pos = rng.choice(100, 2, replace=False)
+    mut[pos] = (mut[pos] + 1) % 4
+    planted = np.concatenate([host[:100], mut, host[100:200]])
+    random_contig = mgsim.random_genome(rng, 300)
+    contigs = np.full((2, 320), 4, np.uint8)
+    contigs[0, : len(planted)] = planted
+    contigs[1, :300] = random_contig
+    lengths = jnp.asarray([len(planted), 300], jnp.int32)
+    hits, scores = hmm.hmm_hits(profile, jnp.asarray(contigs), lengths)
+    assert bool(hits[0]), f"planted region not flagged (score {scores[0]})"
+    assert not bool(hits[1]), f"random contig flagged (score {scores[1]})"

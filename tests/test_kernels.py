@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kmer_extract import kmer_extract
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.sw_extend import sw_extend
+
+
+# ---------- kmer_extract ----------
+@pytest.mark.parametrize("k", [5, 15, 16, 17, 21, 31])
+@pytest.mark.parametrize("R,L", [(8, 64), (16, 100)])
+def test_kmer_extract_matches_ref(k, R, L):
+    rng = np.random.default_rng(k * 100 + R)
+    bases = rng.integers(0, 4, size=(R, L)).astype(np.uint8)
+    # sprinkle Ns + variable lengths
+    bases[rng.random((R, L)) < 0.02] = 4
+    lengths = rng.integers(k, L + 1, size=(R,)).astype(np.int32)
+    got = kmer_extract(jnp.asarray(bases), jnp.asarray(lengths), k=k)
+    want = ref.kmer_extract_ref(jnp.asarray(bases), jnp.asarray(lengths), k=k)
+    gv, wv = np.asarray(got[3]), np.asarray(want[3])
+    np.testing.assert_array_equal(gv, wv)
+    for gi, wi in zip(got[:3], want[:3]):
+        # only compare where valid
+        np.testing.assert_array_equal(np.asarray(gi)[wv], np.asarray(wi)[wv])
+
+
+# ---------- sw_extend ----------
+@pytest.mark.parametrize("band", [7, 15])
+@pytest.mark.parametrize("QL,TL", [(32, 40), (64, 64)])
+def test_sw_extend_matches_ref(band, QL, TL):
+    rng = np.random.default_rng(band + QL)
+    B = 8
+    q = rng.integers(0, 4, size=(B, QL)).astype(np.uint8)
+    t = np.zeros((B, TL), np.uint8)
+    # construct targets: query with mutations/indels so the optimum is banded
+    for b in range(B):
+        seq = list(q[b, : QL - 4])
+        for _ in range(3):
+            p = rng.integers(0, len(seq))
+            op = rng.integers(0, 3)
+            if op == 0:
+                seq[p] = rng.integers(0, 4)
+            elif op == 1 and len(seq) > 10:
+                del seq[p]
+            else:
+                seq.insert(p, rng.integers(0, 4))
+        seq = (seq + list(rng.integers(0, 4, TL)))[:TL]
+        t[b] = seq
+    qlen = np.full((B,), QL, np.int32)
+    tlen = np.full((B,), TL, np.int32)
+    gs, gq, gt = sw_extend(
+        jnp.asarray(q), jnp.asarray(t), jnp.asarray(qlen), jnp.asarray(tlen),
+        band=band,
+    )
+    ws, wq, wt = ref.sw_extend_ref(
+        jnp.asarray(q), jnp.asarray(t), jnp.asarray(qlen), jnp.asarray(tlen),
+        band=band,
+    )
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+
+def test_sw_extend_perfect_match_score():
+    B, QL, TL = 8, 16, 16
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 4, size=(B, QL)).astype(np.uint8)
+    gs, gq, gt = sw_extend(
+        jnp.asarray(q), jnp.asarray(q),
+        jnp.full((B,), QL, jnp.int32), jnp.full((B,), TL, jnp.int32), band=7,
+    )
+    np.testing.assert_array_equal(np.asarray(gs), np.full((B,), QL))
+    np.testing.assert_array_equal(np.asarray(gq), np.full((B,), QL))
+
+
+# ---------- flash attention ----------
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("H,KH", [(4, 4), (4, 2)])
+def test_flash_attention_matches_ref(causal, dtype, H, KH):
+    rng = np.random.default_rng(7)
+    B, S, D = 2, 256, 64
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, KH, S, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, KH, S, D)), dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    rtol, atol = (5e-2, 5e-2) if dtype == jnp.bfloat16 else (1e-5, 1e-5)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=rtol, atol=atol,
+    )
+
+
+# ---------- ssd scan ----------
+@pytest.mark.parametrize("S,chunk", [(128, 32), (256, 64)])
+def test_ssd_scan_matches_ref(S, chunk):
+    rng = np.random.default_rng(11)
+    B, H, P, N = 2, 2, 8, 4
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.standard_normal((B, S, H))) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, H, N)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((B, S, H, N)), jnp.float32)
+    got = ssd_scan(x, a, b, c, chunk=chunk)
+    want = ref.ssd_scan_ref(x, a, b, c)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4
+    )
