@@ -104,6 +104,47 @@ def route(dest, payload, valid, *, num_shards: int, capacity: int,
     )
 
 
+def compact(payload, valid, *, capacity: int):
+    """Pack the valid rows of a routed buffer into `capacity` front slots.
+
+    The receiver half of a read-localization exchange (DESIGN.md §3.3):
+    `route()` hands each shard a [P*route_cap] buffer that is mostly holes;
+    downstream dense stages (alignment, local assembly) want a compact
+    block.  Stable order (arrival order is preserved) so results stay
+    deterministic.
+
+    Returns (payload', valid', overflow): payload rows beyond the valid
+    prefix are zero-filled, and `overflow` counts valid rows that did not
+    fit — reported, never silently dropped (DESIGN.md §3.4).
+    """
+    n = valid.shape[0]
+    if capacity > n:
+        pad = capacity - n
+        payload = jax.tree.map(
+            lambda x: jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]
+            ),
+            payload,
+        )
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+        n = capacity
+    flag = jnp.where(valid, 0, 1).astype(jnp.int32)
+    _, perm = jax.lax.sort(
+        (flag, jnp.arange(n, dtype=jnp.int32)), num_keys=1
+    )
+    perm = perm[:capacity]
+    out_valid = valid[perm]
+    out = jax.tree.map(
+        lambda x: jnp.where(
+            out_valid.reshape((-1,) + (1,) * (x.ndim - 1)), x[perm],
+            jnp.zeros((), x.dtype),
+        ),
+        payload,
+    )
+    overflow = jnp.maximum(valid.sum() - capacity, 0).astype(jnp.int32)
+    return out, out_valid, overflow
+
+
 def fetch(answer_fn, query_key, query_valid, *, num_shards: int,
           capacity: int, axis_name: str | None, owner_of):
     """UC3 remote lookup: route queries to owners, answer, route back.

@@ -1,0 +1,29 @@
+"""Distributed assembly subsystem (DESIGN.md §3).
+
+`repro.core` is the single-shard pipeline; this package shards it over a
+1-D "data" mesh with the paper's three distributed mechanisms: owner
+exchange for k-mer stores (§II-A), read localization (§II-I), and the
+per-shard capacity discipline that keeps weak scaling flat (Table II).
+"""
+from . import capacity, pipeline
+from .pipeline import (
+    ShardedReads,
+    data_mesh,
+    distributed_kmer_analysis,
+    gather_ksets,
+    kmer_owner,
+    localize_reads,
+    shard_reads,
+)
+
+__all__ = [
+    "ShardedReads",
+    "capacity",
+    "data_mesh",
+    "distributed_kmer_analysis",
+    "gather_ksets",
+    "kmer_owner",
+    "localize_reads",
+    "pipeline",
+    "shard_reads",
+]

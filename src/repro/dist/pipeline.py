@@ -1,0 +1,285 @@
+"""Distributed assembly pipeline: shard_map over the paper's UPC phases.
+
+This is the subsystem that turns the single-shard pipeline (repro.core)
+into the paper's end-to-end *distributed* assembly (DESIGN.md §3):
+
+  * `distributed_kmer_analysis` — §II-A/Alg. 2: each shard extracts and
+    pre-combines its local k-mer occurrences, routes every entry to its
+    hash owner through `exchange.route()` (the UC1 aggregated one-sided
+    exchange), and the owner reduces partial (count, extension-histogram)
+    tuples into its shard of the global table.  Ownership is total — a
+    key's global count lives on exactly one shard — which is what makes
+    the per-shard min-count/extension finalize globally correct.
+  * `localize_reads` — §II-I/Fig. 3: route each read to the shard that
+    owns its aligned contig, so the seed lookups and mer-walks of later
+    stages become owner-local by construction.
+  * `shard_reads` / `gather_ksets` — the boundary adapters: pad-and-split
+    host data onto the mesh, and merge owner tables back into one
+    key-sorted table bit-identical to the single-shard oracle.
+
+All buffers are capacity-padded with overflow *reported*, never silently
+dropped (repro.dist.capacity, DESIGN.md §3.4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import exchange, kmer, kmer_analysis
+from repro.core.kmer_analysis import ExtensionPolicy
+from repro.core.types import INVALID_BASE, KmerSet, ReadSet
+from repro.launch import mesh as mesh_lib
+from . import capacity as cap_lib
+
+AXIS = "data"
+
+
+def data_mesh(num_shards: int):
+    """1-D assembly mesh (axis "data") over the first `num_shards` devices."""
+    return mesh_lib.make_data_mesh(num_shards, axis_name=AXIS)
+
+
+def mesh_shards(mesh) -> int:
+    return mesh.shape[AXIS]
+
+
+class ShardedReads(NamedTuple):
+    """A ReadSet padded to an even per-shard split, plus a validity mask.
+
+    Layout is shard-major: rows [s * (R/S), (s+1) * (R/S)) live on shard s
+    when the leading axis is sharded over the mesh.  Padding rows have
+    `valid=False`, zero length and all-INVALID bases, so every downstream
+    consumer (k-mer extraction, alignment) ignores them without needing the
+    mask; the mask exists for exact accounting.
+
+    Mate pointers index the ORIGINAL read order and are invalidated (-1)
+    whenever rows move (localization); scaffolding consumes the original
+    `ReadSet`, not a localized one (DESIGN.md §3.3).
+    """
+
+    bases: jnp.ndarray    # [R, L] uint8
+    lengths: jnp.ndarray  # [R] int32
+    mate: jnp.ndarray     # [R] int32
+    insert_size: int
+    valid: jnp.ndarray    # [R] bool
+
+    @property
+    def num_reads(self) -> int:
+        return self.bases.shape[0]
+
+    @property
+    def max_len(self) -> int:
+        return self.bases.shape[1]
+
+
+def shard_reads(reads, num_shards: int) -> ShardedReads:
+    """Pad a ReadSet so its rows split evenly over `num_shards` shards."""
+    R, L = reads.bases.shape
+    r_pad = -(-R // num_shards) * num_shards
+    pad = r_pad - R
+    valid = jnp.arange(r_pad) < R
+    if pad == 0:
+        return ShardedReads(
+            bases=reads.bases, lengths=reads.lengths, mate=reads.mate,
+            insert_size=reads.insert_size, valid=valid,
+        )
+    return ShardedReads(
+        bases=jnp.concatenate(
+            [reads.bases, jnp.full((pad, L), INVALID_BASE, jnp.uint8)]
+        ),
+        lengths=jnp.concatenate(
+            [reads.lengths, jnp.zeros((pad,), jnp.int32)]
+        ),
+        mate=jnp.concatenate(
+            [reads.mate, jnp.full((pad,), -1, jnp.int32)]
+        ),
+        insert_size=reads.insert_size,
+        valid=valid,
+    )
+
+
+def kmer_owner(hi, lo, num_shards: int):
+    """Owner shard of a canonical k-mer.
+
+    Folds the HIGH half-word of the avalanche hash.  `dht` home slots take
+    the hash's LOW bits (`& (capacity - 1)`), so if ownership used the low
+    bits too (power-of-two shard counts make `% S` a low-bit mask), every
+    key routed to shard s would also hash into the 1/S of table slots
+    congruent to s and probe chains would grow ~S-fold.  Tables stay
+    decorrelated up to 2**16 slots — revisit if per-shard dht capacity
+    ever exceeds that.
+    """
+    h = kmer.kmer_hash(hi, lo)
+    return ((h >> jnp.uint32(16)) % jnp.uint32(num_shards)).astype(jnp.int32)
+
+
+def distributed_kmer_analysis(
+    reads,
+    mesh,
+    *,
+    k: int,
+    pre_capacity: int,
+    capacity: int,
+    route_capacity: Optional[int] = None,
+    min_count: int = 2,
+    policy: ExtensionPolicy = ExtensionPolicy(),
+):
+    """Alg. 2: sharded k-mer counting with owner exchange.
+
+    Args:
+      reads: ReadSet (any row count; padded internally to the mesh).
+      mesh: 1-D "data" mesh from `data_mesh`.
+      pre_capacity: per-shard local pre-combine table rows.
+      capacity: per-shard owner table rows.
+      route_capacity: rows per (sender, destination) route buffer; defaults
+        to the `capacity.default_route_capacity` heuristic.
+    Returns:
+      (kset, route_overflow, table_overflow):
+        kset: KmerSet with flat [S * capacity] arrays — rows
+          [s*capacity, (s+1)*capacity) are shard s's owner table, live
+          entries packed to the front in ascending key order.
+        route_overflow: scalar int32, entries dropped in the exchange.
+        table_overflow: scalar int32, count of shard tables (pre or owner)
+          whose unique-key population exceeded their budget.
+    """
+    S = mesh_shards(mesh)
+    if route_capacity is None:
+        route_capacity = cap_lib.default_route_capacity(pre_capacity, S)
+    sharded = shard_reads(reads, S)
+
+    def body(bases, lengths):
+        local = ReadSet(
+            bases=bases, lengths=lengths,
+            mate=jnp.full(lengths.shape, -1, jnp.int32), insert_size=0,
+        )
+        hi, lo, left, right, valid = kmer_analysis.occurrences(local, k=k)
+        pre = kmer_analysis.count_occurrences(
+            hi, lo, left, right, valid, capacity=pre_capacity
+        )
+        pre_valid = pre["count"] > 0
+        dest = kmer_owner(pre["hi"], pre["lo"], S)
+        res = exchange.route(
+            dest,
+            (pre["hi"], pre["lo"], pre["count"], pre["left_cnt"],
+             pre["right_cnt"]),
+            pre_valid,
+            num_shards=S,
+            capacity=route_capacity,
+            axis_name=AXIS,
+        )
+        rhi, rlo, rcnt, rl, rr = res.payload
+        tab = kmer_analysis.aggregate_weighted(
+            rhi, rlo, rcnt, rl, rr, res.valid, capacity=capacity
+        )
+        kset = kmer_analysis.finalize(tab, min_count=min_count, policy=policy)
+        table_ovf = jax.lax.psum(
+            pre["overflow"].astype(jnp.int32)
+            + tab["overflow"].astype(jnp.int32),
+            AXIS,
+        )
+        return kset, res.overflow, table_ovf
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(), P()),
+        check_rep=False,
+    )
+    return fn(sharded.bases, sharded.lengths)
+
+
+def gather_ksets(kset: KmerSet, *, capacity: int) -> dict:
+    """Merge per-shard owner tables into one key-sorted count table.
+
+    Because ownership is total, each live key appears on exactly one shard
+    and the "merge" is a re-sort: the result's live rows are the union in
+    ascending key order, bit-identical to what the single-shard
+    `kmer_analysis.count_occurrences` oracle produces for the same reads
+    (modulo entries below `min_count`, which the shards already dropped).
+    Overflow (`n_unique > capacity`) is flagged in the returned dict,
+    never silently dropped.
+    """
+    return kmer_analysis.aggregate_weighted(
+        kset.hi, kset.lo, kset.count, kset.left_cnt, kset.right_cnt,
+        kset.used, capacity=capacity,
+    )
+
+
+def localize_reads(reads, aln_contig, mesh, *, out_factor: int = 2):
+    """Fig. 3: move each read to the shard owning its aligned contig.
+
+    Contig c is owned by shard c mod S (the same modular ownership the
+    alignment seed index and local-assembly stages use), so after this
+    exchange a read's seed lookups and mer-walk extensions resolve on its
+    own shard.  Unaligned reads (aln_contig < 0) stay home.
+
+    Args:
+      reads: ShardedReads (or ReadSet with rows divisible by the mesh).
+      aln_contig: [R'] int32 best-hit contig per read (-1 unaligned);
+        padded/truncated to the read count.
+      out_factor: per-shard output slots as a multiple of the per-shard
+        input rows — slack for skewed contig ownership.
+    Returns:
+      (localized, overflow): localized is a ShardedReads of
+      S * out_factor * (R/S) rows, shard-major; overflow counts reads that
+      exceeded a destination's budget — route lanes or the receiver block
+      (reported, not resent).
+    """
+    S = mesh_shards(mesh)
+    R = reads.bases.shape[0]
+    assert R % S == 0, f"reads rows {R} not divisible by {S}; use shard_reads"
+    per = R // S
+    out_per = out_factor * per
+    valid = getattr(reads, "valid", None)
+    if valid is None:
+        valid = reads.lengths > 0
+    aln = jnp.asarray(aln_contig, jnp.int32)[:R]
+    if aln.shape[0] < R:
+        aln = jnp.concatenate(
+            [aln, jnp.full((R - aln.shape[0],), -1, jnp.int32)]
+        )
+
+    # Per-destination route lanes sized so the receive buffer (S *
+    # route_cap rows) stays proportional to the per-shard OUTPUT block,
+    # not to the global read count — anything past the receiver's out_per
+    # budget would be cut at compact() anyway, so lanes wider than
+    # ~out_per/S per sender only buy memory, not reads.  2x slack absorbs
+    # sender skew; `min(per, ...)` because a sender holds only `per` rows.
+    route_cap = min(per, -(-2 * out_per // S))
+
+    def body(bases, lengths, valid, aln):
+        me = jax.lax.axis_index(AXIS)
+        dest = jnp.where(aln >= 0, aln % S, me).astype(jnp.int32)
+        res = exchange.route(
+            dest, (bases, lengths), valid,
+            num_shards=S, capacity=route_cap, axis_name=AXIS,
+        )
+        (rb, rl), rv, ovf = exchange.compact(
+            res.payload, res.valid, capacity=out_per
+        )
+        rb = jnp.where(rv[:, None], rb, jnp.uint8(INVALID_BASE))
+        total_ovf = res.overflow + jax.lax.psum(ovf, AXIS)
+        return rb, rl, rv, total_ovf
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
+        check_rep=False,
+    )
+    rb, rl, rv, overflow = fn(reads.bases, reads.lengths, valid, aln)
+    localized = ShardedReads(
+        bases=rb,
+        lengths=rl,
+        mate=jnp.full((S * out_per,), -1, jnp.int32),
+        insert_size=reads.insert_size,
+        valid=rv,
+    )
+    return localized, overflow

@@ -9,6 +9,26 @@ from __future__ import annotations
 import jax
 
 
+def make_data_mesh(num_shards: int, *, axis_name: str = "data"):
+    """1-D data mesh over the first `num_shards` devices (DESIGN.md §3.1).
+
+    The distributed assembly pipeline (repro.dist) is pure data parallelism
+    — reads and k-mer ownership shard over one axis; there is no model
+    axis.  Benchmarks build meshes smaller than the process device count
+    (strong scaling over 1/2/4/8 shards), hence the explicit prefix slice.
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    if num_shards > len(devices):
+        raise ValueError(
+            f"requested {num_shards} shards but only {len(devices)} devices"
+        )
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:num_shards]), axis_names=(axis_name,))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -1,6 +1,9 @@
 """Hash-table build/lookup properties (paper §II-A use cases)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dht

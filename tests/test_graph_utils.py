@@ -1,6 +1,9 @@
 """chain.py, cc.py, bubble/pruning, hmm: unit + property tests."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cc, chain, hmm
