@@ -14,8 +14,9 @@ from ._subproc import run_with_devices
 
 BODY = """
 import time
-from repro.core import alignment, pipeline as pipe
-from repro.core.kmer_analysis import ExtensionPolicy
+from repro.api import Assembler, Local
+from repro.configs import assembly_presets
+from repro.core import alignment
 from repro.data import mgsim
 from repro.dist import pipeline as dist
 
@@ -24,10 +25,9 @@ comm = mgsim.sample_community(60, num_genomes=6, genome_len=400,
                               abundance_sigma=0.4)
 reads, _ = mgsim.generate_reads(61, comm, num_pairs=600, read_len=60)
 mesh = dist.data_mesh(S)
-cfg = pipe.PipelineConfig(k_min=21, k_max=21, kmer_capacity=1 << 15,
-                          contig_cap=256, max_contig_len=2048,
-                          run_local_assembly=False)
-contigs, alive, al, _ = pipe.iterative_contig_generation(reads, cfg)
+# shared preset (same source as examples/distributed_assembly.py)
+plan = assembly_presets.small_community_plan()
+contigs, alive, al, _ = Assembler(plan, Local()).contig_rounds(reads)
 reads_s = dist.shard_reads(reads, S)
 aln_c = al.contig[:, 0]
 

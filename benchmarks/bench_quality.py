@@ -21,7 +21,9 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import hmm, pipeline
+from repro.api import Assembler, Local
+from repro.configs import assembly_presets
+from repro.core import hmm
 from repro.core.kmer_analysis import ExtensionPolicy
 from repro.data import mgsim
 
@@ -52,12 +54,7 @@ def pieces_of(out, min_len=60):
     return [bases[i, : lens[i]] for i in range(len(lens)) if lens[i] >= min_len]
 
 
-BASE = pipeline.PipelineConfig(
-    k_min=17, k_max=21, k_step=4,
-    kmer_capacity=1 << 15, contig_cap=512, max_contig_len=2048,
-    walk_capacity=1 << 16, link_capacity=1 << 11, max_scaffold_len=1 << 12,
-    policy=ExtensionPolicy(err_rate=0.05),
-)
+BASE = assembly_presets.quality_plan()
 
 MODES = {
     "metahipmer": BASE,
@@ -75,9 +72,9 @@ def run(seed=40, num_pairs=900, err_rate=0.004, verbose=True):
                                     read_len=60, err_rate=err_rate)
     profile = hmm.build_profile([rrna])
     rows = []
-    for mode, cfg in MODES.items():
+    for mode, plan in MODES.items():
         t0 = time.time()
-        out = pipeline.assemble(reads, cfg)
+        out = Assembler(plan, Local()).assemble(reads)
         dt = time.time() - t0
         pieces = pieces_of(out)
         rep = metrics.evaluate(pieces, comm.genomes)

@@ -18,6 +18,7 @@ from ._subproc import run_with_devices
 def strong_scaling_body(S: int) -> str:
     return f"""
 import time
+from repro.api import AssemblyPlan
 from repro.data import mgsim
 from repro.dist import pipeline as dist
 
@@ -26,11 +27,15 @@ comm = mgsim.sample_community(70, num_genomes=6, genome_len=500,
 reads, _ = mgsim.generate_reads(71, comm, num_pairs=1200, read_len=60,
                                 err_rate=0.003)
 mesh = dist.data_mesh({S})
+plan = AssemblyPlan.from_dataset(reads, (21, 21, 4), num_shards={S},
+                                 pre_capacity=1 << 15,
+                                 shard_table_capacity=1 << 15)
 # warmup + timed run
 for rep in range(2):
     t0 = time.time()
     kset, route_ovf, tab_ovf = dist.distributed_kmer_analysis(
-        reads, mesh, k=21, pre_capacity=1 << 15, capacity=1 << 15)
+        reads, mesh, k=21, pre_capacity=plan.pre_cap,
+        capacity=plan.shard_table_cap, route_capacity=plan.route_cap)
     kset.hi.block_until_ready()
     dt = time.time() - t0
 import numpy as np
@@ -46,19 +51,15 @@ print(f"RESULT overflow={{int(route_ovf)}}")
 
 STAGE_BODY = """
 import time
-from repro.core import pipeline as pipe
-from repro.core.kmer_analysis import ExtensionPolicy
+from repro.api import Assembler, Local
+from repro.configs import assembly_presets
 from repro.data import mgsim
 
 comm = mgsim.sample_community(72, num_genomes=4, genome_len=500,
                               abundance_sigma=0.4)
 reads, _ = mgsim.generate_reads(73, comm, num_pairs=800, read_len=60,
                                 err_rate=0.003)
-cfg = pipe.PipelineConfig(k_min=17, k_max=21, k_step=4,
-                          kmer_capacity=1 << 15, contig_cap=512,
-                          max_contig_len=2048, walk_capacity=1 << 16,
-                          link_capacity=1 << 11,
-                          policy=ExtensionPolicy(err_rate=0.05))
+cfg = assembly_presets.quality_plan()
 import repro.core.kmer_analysis as ka, repro.core.dbg as dbg
 import repro.core.alignment as alignment, repro.core.local_assembly as la
 import repro.core.scaffolding as sc, repro.core.gap_closing as gc
@@ -66,7 +67,7 @@ import jax
 
 stages = {}
 t0 = time.time()
-out = pipe.assemble(reads, cfg)
+out = Assembler(cfg, Local()).assemble(reads)
 stages["total"] = time.time() - t0
 # per-stage re-timing (compiled paths reused)
 t = time.time(); kset = ka.analyze(reads, k=21, capacity=cfg.kmer_capacity)

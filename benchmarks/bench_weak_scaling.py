@@ -15,6 +15,7 @@ from ._subproc import run_with_devices
 def body(S: int) -> str:
     return f"""
 import time
+from repro.api import AssemblyPlan
 from repro.data import mgsim
 from repro.dist import pipeline as dist
 
@@ -24,10 +25,14 @@ comm = mgsim.sample_community(80 + S, num_genomes=2 * S, genome_len=400,
 reads, _ = mgsim.generate_reads(90 + S, comm, num_pairs=300 * S,
                                 read_len=60, err_rate=0.003)
 mesh = dist.data_mesh(S)
+plan = AssemblyPlan.from_dataset(reads, (21, 21, 4), num_shards=S,
+                                 pre_capacity=1 << 15,
+                                 shard_table_capacity=1 << 14)
 for rep in range(2):
     t0 = time.time()
     kset, route_ovf, tab_ovf = dist.distributed_kmer_analysis(
-        reads, mesh, k=21, pre_capacity=1 << 15, capacity=1 << 14)
+        reads, mesh, k=21, pre_capacity=plan.pre_cap,
+        capacity=plan.shard_table_cap, route_capacity=plan.route_cap)
     kset.hi.block_until_ready()
     dt = time.time() - t0
 import numpy as np

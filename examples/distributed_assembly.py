@@ -1,10 +1,12 @@
-"""Distributed assembly: the paper's pipeline over an 8-shard mesh.
+"""Distributed assembly: the FULL pipeline over an 8-shard mesh.
 
     PYTHONPATH=src python examples/distributed_assembly.py
 
-Shows the three distributed mechanisms end to end on host devices:
-UC1 owner exchange (k-mer analysis), read localization (§II-I), and the
-per-shard capacity discipline that keeps weak scaling flat.
+One facade, two execution strategies: the same `Assembler` that runs the
+quickstart on one device runs Algorithm 1 + Algorithm 3 here across 8
+shards — owner exchange for read AND contig k-mers, per-shard alignment,
+read localization feeding per-shard local assembly, pair-atomic
+localization feeding per-shard scaffolding witnesses (DESIGN.md §6).
 
 NOTE: must run as its own process (it forces 8 host devices).
 """
@@ -15,8 +17,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 
-from repro.core import alignment, pipeline as pipe  # noqa: E402
-from repro.core.kmer_analysis import ExtensionPolicy  # noqa: E402
+from repro.api import Assembler, Local, Mesh  # noqa: E402
+from repro.configs import assembly_presets  # noqa: E402
 from repro.data import mgsim  # noqa: E402
 from repro.dist import pipeline as dist  # noqa: E402
 
@@ -27,40 +29,52 @@ def main():
                                   abundance_sigma=0.4)
     reads, _ = mgsim.generate_reads(6, comm, num_pairs=800, read_len=60,
                                     err_rate=0.003)
-    mesh = dist.data_mesh(8)
-    print(f"mesh: {mesh.devices.size} shards")
-
-    # --- distributed k-mer analysis (UC1 exchange + UC4 reduce) ---
-    kset, route_ovf, tab_ovf = dist.distributed_kmer_analysis(
-        reads, mesh, k=21, pre_capacity=1 << 15, capacity=1 << 14
+    # shared preset: the localization benchmark builds from the same one,
+    # so the two can't drift
+    plan = assembly_presets.small_community_plan(
+        num_shards=8, run_local_assembly=True,
     )
-    owned = np.asarray(kset.used).reshape(8, -1).sum(axis=1)
-    print(f"k-mer analysis: owned per shard {owned.tolist()} "
-          f"(route overflow {int(route_ovf)})")
+    print(f"plan: kmer_capacity={plan.kmer_capacity} "
+          f"pre={plan.pre_cap}/shard route={plan.route_cap} "
+          f"~{plan.bind(reads).bytes() / 1e6:.1f} MB/shard")
 
-    # --- contig generation (gathered survivor set) ---
-    cfg = pipe.PipelineConfig(k_min=21, k_max=21, kmer_capacity=1 << 15,
-                              contig_cap=256, max_contig_len=2048,
-                              run_local_assembly=False,
-                              policy=ExtensionPolicy(err_rate=0.05))
-    contigs, alive, al, stats = pipe.iterative_contig_generation(reads, cfg)
-    print(f"contigs: {int(alive.sum())} live")
+    out = Assembler(plan, Mesh(num_shards=8)).assemble(reads)
+    for st in out["stats"]:
+        print(f"k={st.k}: {st.n_kmers} kmers -> {st.n_contigs} contigs; "
+              f"aligned {st.aligned_frac:.1%}; "
+              f"local assembly +{st.extended_bases}bp")
+    print(f"overflow accounting: {out['overflow']}")
 
-    # --- read localization (Fig. 3 optimization) ---
+    # Fig. 3 mechanism check: after localization, aligned reads sit on the
+    # shard owning their contig
     reads8 = dist.shard_reads(reads, 8)
-    localized, ovf = dist.localize_reads(reads8, al.contig[:, 0], mesh)
-    sidx = alignment.build_seed_index(contigs, alive, seed_len=21,
-                                      capacity=1 << 15)
-    al2 = alignment.align_reads(localized, contigs, sidx, seed_len=21)
+    mesh = dist.data_mesh(8)
+    localized, ovf = dist.localize_reads(
+        reads8, out["alignments"].contig[:, 0], mesh
+    )
     R = localized.num_reads
     per = R // 8
+    # realign the localized block to observe owner-locality
+    from repro.dist import stages
+    from repro.core import alignment
+    sidx = alignment.build_seed_index(
+        out["contigs"], out["alive"], seed_len=21, capacity=plan.seed_cap
+    )
+    al2 = stages.sharded_align(localized, out["contigs"], sidx, mesh,
+                               seed_len=21)
     shard_of_read = np.arange(R) // per
     c = np.asarray(al2.contig[:, 0])
     ok = c >= 0
     loc = float((np.where(ok, c % 8, -1)[ok] == shard_of_read[ok]).mean())
     print(f"read localization: {loc:.1%} of aligned reads now live on "
-          f"their contig's owner shard")
+          f"their contig's owner shard (overflow {int(ovf)})")
     assert loc > 0.9
+
+    # scaffold stats match a Local() run of the same plan
+    lens_m = np.asarray(out["scaffold_seqs"].lengths)
+    out_local = Assembler(plan, Local()).assemble(reads)
+    lens_l = np.asarray(out_local["scaffold_seqs"].lengths)
+    print(f"assembled bp: mesh={int(lens_m.sum())} local={int(lens_l.sum())}")
 
 
 if __name__ == "__main__":

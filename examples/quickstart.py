@@ -2,13 +2,16 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Generates a 3-genome community with MGSim, runs the full MetaHipMer
-pipeline (iterative contig generation + scaffolding + gap closing), and
-prints assembly statistics against the known references.
+Generates a 3-genome community with MGSim, derives a capacity plan from
+the dataset shape, and runs the full MetaHipMer pipeline (iterative
+contig generation + scaffolding + gap closing) through the unified
+`Assembler` facade, printing assembly statistics against the known
+references.  Swapping `Local()` for `Mesh(num_shards=8)` runs the same
+pipeline distributed (see examples/distributed_assembly.py).
 """
 import numpy as np
 
-from repro.core import pipeline
+from repro.api import Assembler, AssemblyPlan, Local
 from repro.core.kmer_analysis import ExtensionPolicy
 from repro.data import mgsim
 
@@ -26,18 +29,25 @@ def main():
     print(f"reads: {reads.num_reads} x {reads.max_len}bp "
           f"(insert {reads.insert_size})")
 
-    cfg = pipeline.PipelineConfig(
-        k_min=17, k_max=21, k_step=4,
-        kmer_capacity=1 << 15, contig_cap=512, max_contig_len=2048,
+    # one capacity plan, derived from dataset shape (no guess-a-power-of-two).
+    # unique_rate ~ 1/coverage + error mints: this community is ~45x covered
+    # with 0.4% errors, so ~10% of k-mer occurrences are distinct keys
+    plan = AssemblyPlan.from_dataset(
+        reads, (17, 21, 4), slack=2.0, unique_rate=0.1,
         policy=ExtensionPolicy(min_ext=2, t_base=2.0, err_rate=0.05),
     )
-    out = pipeline.assemble(reads, cfg)
+    print(f"plan: kmer_capacity={plan.kmer_capacity} "
+          f"contig_cap={plan.contig_cap} walk_capacity={plan.walk_capacity} "
+          f"~{plan.bytes() / 1e6:.1f} MB working set")
+
+    out = Assembler(plan, Local()).assemble(reads)
 
     for st in out["stats"]:
         print(f"k={st.k}: {st.n_kmers} kmers -> {st.n_contigs} contigs "
               f"(bubbles {st.n_bubbles}, hair {st.n_hair}, "
               f"pruned {st.n_pruned}); aligned {st.aligned_frac:.1%}; "
               f"local assembly +{st.extended_bases}bp")
+    print(f"overflow accounting: {out['overflow']}")
 
     seqs = out["scaffold_seqs"]
     lens = np.asarray(seqs.lengths)

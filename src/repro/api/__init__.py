@@ -1,0 +1,28 @@
+"""Unified assembler front door (DESIGN.md §6).
+
+    from repro.api import Assembler, AssemblyPlan, Local, Mesh
+
+    plan = AssemblyPlan.from_dataset(reads, (17, 21, 4))
+    out = Assembler(plan, Local()).assemble(reads)
+    out = Assembler(plan8, Mesh(num_shards=8)).assemble(reads)
+
+One entry point, one capacity plan, local-or-mesh execution.  The legacy
+`repro.core.pipeline.assemble` / `PipelineConfig` pair still works as a
+deprecation shim delegating here via `plan_from`.
+"""
+from .assembler import Assembler, IterationStats, extract_contig_kmers
+from .context import ExecutionContext, Local, Mesh
+from .plan import AssemblyPlan, PlanError, plan_from, validate_assembly_params
+
+__all__ = [
+    "Assembler",
+    "AssemblyPlan",
+    "ExecutionContext",
+    "IterationStats",
+    "Local",
+    "Mesh",
+    "PlanError",
+    "extract_contig_kmers",
+    "plan_from",
+    "validate_assembly_params",
+]

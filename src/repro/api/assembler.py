@@ -1,0 +1,174 @@
+"""`Assembler`: the one front door to the MetaHipMer pipeline.
+
+    plan = AssemblyPlan.from_dataset(reads, (17, 21, 4), slack=2.0)
+    out = Assembler(plan, Local()).assemble(reads)          # one device
+    out = Assembler(plan8, Mesh(num_shards=8)).assemble(reads)  # 8 shards
+
+Algorithm 1 (iterative contig generation) + Algorithm 3 (scaffolding) are
+driven here once, against the `ExecutionContext` stage protocol; the
+context decides whether each read-proportional stage runs on one device or
+per shard with owner exchanges (DESIGN.md §6).  Contig-scale graph work
+(dBG traversal, bubbles, pruning, link matching, gap closing) is shared
+verbatim between both contexts.
+
+Contig k-mers from iteration i enter iteration i+1 as pseudo-counted
+"error-free" (k+s)-mers (§II-H): their extension context comes from the
+contig sequence itself, weighted so they survive the count/extension
+thresholds where read support is thin, while strong read evidence still
+dominates the merged histograms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import bubble, dbg, gap_closing, kmer, kmer_analysis, \
+    pruning, scaffolding
+
+from .context import ExecutionContext, Local
+from .plan import AssemblyPlan
+
+
+@dataclasses.dataclass
+class IterationStats:
+    k: int
+    n_kmers: int
+    n_contigs: int
+    n_bubbles: int
+    n_hair: int
+    n_pruned: int
+    aligned_frac: float
+    extended_bases: int
+    overflow: bool
+    route_overflow: int = 0
+
+
+def extract_contig_kmers(contigs, alive, *, k: int, capacity: int,
+                         weight: int):
+    """(k+s)-mer pseudo-count table from a contig set (§II-H)."""
+    return kmer_analysis.pseudo_count_table(
+        contigs.bases, jnp.where(alive, contigs.lengths, 0),
+        k=k, capacity=capacity, weight=weight,
+    )
+
+
+def contig_stage(kset, k: int, plan: AssemblyPlan):
+    """dBG traversal -> bubbles -> pruning (contig scale, context-free)."""
+    index = dbg.build_index(kset)
+    trav = dbg.traverse(
+        kset, index, k=k, contig_cap=plan.contig_cap,
+        max_len=plan.max_contig_len,
+    )
+    contigs = trav.contigs
+    ends = dbg.end_neighbor_forks(
+        kset, index, trav, k=k, contig_cap=plan.contig_cap
+    )
+    bub = bubble.merge_bubbles(contigs.lengths, contigs.depths, ends, k=k)
+    prn = pruning.prune(
+        contigs.lengths,
+        contigs.depths,
+        ends,
+        bub.alive,
+        k=k,
+        num_kmers=plan.kmer_capacity,
+        alpha=plan.prune_alpha,
+        beta=plan.prune_beta,
+    )
+    return contigs, prn.alive, trav, bub, prn
+
+
+class Assembler:
+    """One entry point; execution strategy comes from the context."""
+
+    def __init__(self, plan: AssemblyPlan, ctx: Optional[ExecutionContext] = None):
+        self.plan = plan
+        self.ctx = ctx if ctx is not None else Local()
+
+    # ---- Algorithm 1 ----
+
+    def _round(self, k: int, prev):
+        """One contig-generation iteration; returns (contigs, alive, al,
+        stats).  `prev` feeds §II-H cross-iteration evidence."""
+        plan, ctx = self.plan, self.ctx
+        kset, kovf = ctx.kmer_set(k, prev)
+        contigs, alive, trav, bub, prn = contig_stage(kset, k, plan)
+        al = ctx.align(contigs, alive, k)
+        ext_bases = 0
+        if plan.run_local_assembly:
+            old_total = int(jnp.where(alive, contigs.lengths, 0).sum())
+            contigs = ctx.extend(contigs, alive, al, k)
+            ext_bases = (
+                int(jnp.where(alive, contigs.lengths, 0).sum()) - old_total
+            )
+        stats = IterationStats(
+            k=k,
+            n_kmers=int(kset.used.sum()),
+            n_contigs=int(alive.sum()),
+            n_bubbles=int(bub.merged_away.sum()),
+            n_hair=int(bub.hair.sum()),
+            n_pruned=int(prn.pruned),
+            aligned_frac=float((al.contig[:, 0] >= 0).mean()),
+            extended_bases=ext_bases,
+            overflow=bool(kovf.get("table")) or bool(trav.overflow),
+            route_overflow=int(kovf.get("route", 0)),
+        )
+        return contigs, alive, al, stats
+
+    def contig_rounds(self, reads, *, prev=None):
+        """Algorithm 1: iterate k over the plan's schedule."""
+        self.ctx.prepare(reads, self.plan)
+        contigs = alive = al = None
+        all_stats = []
+        for k in self.plan.ks():
+            contigs, alive, al, stats = self._round(k, prev)
+            all_stats.append(stats)
+            prev = (contigs, alive)
+        return contigs, alive, al, all_stats
+
+    # ---- Algorithm 1 + Algorithm 3 ----
+
+    def assemble(self, reads, hmm_hit=None) -> dict:
+        """Full pipeline.  Returns the same result dict as the historical
+        `core.pipeline.assemble` plus the plan and overflow accounting."""
+        plan, ctx = self.plan, self.ctx
+        contigs, alive, _, stats = self.contig_rounds(reads)
+        # fresh alignment against the final contigs (Alg. 3 line 3)
+        k_last = plan.ks()[-1]
+        al = ctx.align(contigs, alive, k_last)
+        ea, eb, gap, valid, is_splint = ctx.link_candidates(al, contigs, alive)
+        links = scaffolding.links_from_candidates(
+            ea, eb, gap, valid, is_splint, alive,
+            capacity=plan.link_capacity, min_support=plan.min_link_support,
+        )
+        scaffs, links, suspended, comp = scaffolding.scaffold_from_links(
+            links, contigs, alive, float(reads.insert_size),
+            max_members=plan.max_members, hmm_hit=hmm_hit,
+        )
+        # gap closing walks consume the original read set (mates are global
+        # there; DESIGN.md §3.3) on both contexts
+        aln0 = al.contig[:, 0][: reads.num_reads]
+        seqs = gap_closing.close_and_render(
+            scaffs,
+            contigs,
+            reads,
+            aln0,
+            seed_len=min(k_last, 25),
+            mer_sizes=plan.ladder(k_last),
+            walk_capacity=plan.walk_capacity,
+            max_scaffold_len=plan.max_scaffold_len,
+        )
+        return {
+            "contigs": contigs,
+            "alive": alive,
+            "alignments": al,
+            "scaffolds": scaffs,
+            "scaffold_seqs": seqs,
+            "links": links,
+            "suspended": suspended,
+            "components": comp,
+            "stats": stats,
+            "plan": plan,
+            "overflow": ctx.overflow(),
+        }

@@ -1,0 +1,263 @@
+"""Execution contexts: where the pipeline's read-proportional work runs.
+
+The paper's defining property is that one pipeline "runs seamlessly on
+shared and distributed-memory systems"; here that is an explicit seam.
+`Assembler` drives Algorithm 1 + Algorithm 3 against a small *stage
+protocol* (`ExecutionContext`), and the two implementations place the work
+differently:
+
+  * `Local()` — every stage on the current default device, numerically
+    identical to the historical `core.pipeline.assemble`;
+  * `Mesh(num_shards)` — read-proportional stages (k-mer analysis,
+    alignment, local assembly, link-witness generation) run per shard on a
+    1-D "data" mesh with the paper's owner exchanges between them
+    (DESIGN.md §6); contig-proportional stages (traversal, matching)
+    replicate, because contig state is orders of magnitude smaller than
+    read state.
+
+The protocol is deliberately narrow: `prepare`, `kmer_set`, `align`,
+`extend`, `link_candidates`, plus `overflow()` accounting.  Everything a
+context returns is in *global* layout (full-length arrays), so the
+Assembler never branches on the execution strategy.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import alignment, kmer_analysis, local_assembly, scaffolding
+
+
+class ExecutionContext:
+    """Stage protocol shared by Local and Mesh execution."""
+
+    num_shards: int = 1
+
+    def prepare(self, reads, plan) -> None:
+        """Bind the dataset + plan; called once per `assemble`."""
+        raise NotImplementedError
+
+    def kmer_set(self, k: int, prev):
+        """Counted, finalized k-mer set for this round.
+
+        `prev` is None, a (contigs, alive) pair from the previous round
+        (whose (k)-mers enter as pseudo-counted evidence, §II-H), or a
+        precomputed count table dict (legacy shim path).
+        Returns (KmerSet, overflow_dict).
+        """
+        raise NotImplementedError
+
+    def align(self, contigs, alive, k: int):
+        """Alignments of every read against the live contigs ([R, 2])."""
+        raise NotImplementedError
+
+    def extend(self, contigs, alive, al, k: int):
+        """Local-assembly extension of contig ends (§II-G)."""
+        raise NotImplementedError
+
+    def link_candidates(self, al, contigs, alive):
+        """Per-read splint/span link witnesses (flat candidate arrays)."""
+        raise NotImplementedError
+
+    def overflow(self) -> dict:
+        """Accumulated overflow counts (reported, never dropped: §3.4)."""
+        return dict(self._overflow)
+
+    def _note_overflow(self, key: str, n) -> None:
+        self._overflow[key] = self._overflow.get(key, 0) + int(n)
+
+    def _reset_overflow(self) -> None:
+        self._overflow = {}
+
+
+class Local(ExecutionContext):
+    """Single-shard execution on the default device.
+
+    Numerically identical to the pre-facade `core.pipeline` stages — the
+    backward-compat shims delegate here and tests assert scaffold
+    equality.
+    """
+
+    def __init__(self):
+        self._reset_overflow()
+
+    def prepare(self, reads, plan) -> None:
+        self.reads = reads
+        self.plan = plan
+        self._reset_overflow()
+
+    def kmer_set(self, k: int, prev):
+        plan = self.plan
+        hi, lo, left, right, valid = kmer_analysis.occurrences(self.reads, k=k)
+        if plan.low_memory:
+            valid = kmer_analysis.admit_two_sightings(
+                hi, lo, valid, bloom_bits=max(1 << 16, plan.kmer_capacity * 8)
+            )
+        tab = kmer_analysis.count_occurrences(
+            hi, lo, left, right, valid, capacity=plan.kmer_capacity
+        )
+        if prev is not None:
+            if not isinstance(prev, dict):
+                from .assembler import extract_contig_kmers
+
+                contigs, alive = prev
+                prev = extract_contig_kmers(
+                    contigs, alive, k=k, capacity=plan.kmer_capacity,
+                    weight=plan.contig_pseudo_weight,
+                )
+            tab = kmer_analysis.merge_counts(
+                tab, prev, capacity=plan.kmer_capacity
+            )
+        self._note_overflow("kmer_table", tab["overflow"])
+        kset = kmer_analysis.finalize(
+            tab, min_count=plan.min_count, policy=plan.policy
+        )
+        return kset, {"table": bool(tab["overflow"])}
+
+    def align(self, contigs, alive, k: int):
+        seed_len = min(k, 27)
+        sidx = alignment.build_seed_index(
+            contigs, alive, seed_len=seed_len, capacity=self.plan.seed_cap
+        )
+        return alignment.align_reads(
+            self.reads, contigs, sidx, seed_len=seed_len,
+            stride=self.plan.seed_stride,
+        )
+
+    def extend(self, contigs, alive, al, k: int):
+        extended, _walk = local_assembly.extend_contigs(
+            self.reads, contigs, alive, al.contig[:, 0],
+            mer_sizes=self.plan.ladder(k),
+            capacity=self.plan.walk_capacity,
+            max_ext=self.plan.max_ext,
+        )
+        return extended
+
+    def link_candidates(self, al, contigs, alive):
+        clens = jnp.where(alive, contigs.lengths, 0)
+        return scaffolding.candidate_links(al, self.reads, clens)
+
+
+class Mesh(ExecutionContext):
+    """Distributed execution over a 1-D "data" mesh (DESIGN.md §3, §6).
+
+    Read-proportional stages run per shard via `repro.dist`; k-mer and
+    link state move through the paper's owner exchanges; contig-scale
+    graph work replicates.  Requires `num_shards` visible devices (host
+    devices count: set XLA_FLAGS=--xla_force_host_platform_device_count
+    before importing jax).
+    """
+
+    def __init__(self, num_shards: int = 8, *, mesh=None):
+        if num_shards < 1:
+            raise ValueError(f"Mesh needs num_shards >= 1, got {num_shards}")
+        self.num_shards = int(num_shards)
+        self._mesh = mesh
+        self._reset_overflow()
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.dist import pipeline as dist
+
+            self._mesh = dist.data_mesh(self.num_shards)
+        return self._mesh
+
+    def prepare(self, reads, plan) -> None:
+        import dataclasses
+
+        from repro.dist import pipeline as dist
+
+        if plan.num_shards not in (1, self.num_shards):
+            raise ValueError(
+                f"plan was sized for {plan.num_shards} shards but the mesh "
+                f"has {self.num_shards}; re-plan with "
+                f"AssemblyPlan.from_dataset(..., num_shards="
+                f"{self.num_shards})"
+            )
+        if plan.num_shards != self.num_shards:
+            # a default (single-shard) plan adapts here: the global
+            # capacities carry over, the per-shard ones (pre_cap,
+            # route_cap, ...) re-derive for this mesh width so exchange
+            # buffers and plan.bytes() are priced for S shards, not 1
+            plan = dataclasses.replace(plan, num_shards=self.num_shards)
+        self.reads = reads          # original layout: scaffolding mates
+        self.plan = plan
+        self.sharded = dist.shard_reads(reads, self.num_shards)
+        self._reset_overflow()
+
+    def kmer_set(self, k: int, prev):
+        from repro.dist import pipeline as dist, stages
+
+        plan = self.plan
+        prev_contigs = None
+        if isinstance(prev, dict):
+            # a precomputed count table has no shard layout to exchange;
+            # refusing beats silently dropping the §II-H evidence
+            raise NotImplementedError(
+                "Mesh.kmer_set needs (contigs, alive) for the contig-kmer "
+                "owner exchange; a precomputed table dict is Local-only "
+                "(legacy shim path)"
+            )
+        if prev is not None:
+            prev_contigs = prev
+        # route_capacity: pass the explicit override if the plan has one,
+        # else let the stage derive it per round — contig-carrying rounds
+        # need wider lanes than the first round
+        kset_sh, route_ovf, table_ovf = stages.sharded_kmer_analysis(
+            self.sharded, self.mesh, k=k,
+            pre_capacity=plan.pre_cap,
+            capacity=plan.shard_table_cap,
+            route_capacity=plan.route_capacity,
+            min_count=plan.min_count, policy=plan.policy,
+            prev_contigs=prev_contigs,
+            contig_weight=plan.contig_pseudo_weight,
+        )
+        self._note_overflow("kmer_route", route_ovf)
+        self._note_overflow("kmer_table", table_ovf)
+        merged = dist.gather_ksets(kset_sh, capacity=plan.kmer_capacity)
+        self._note_overflow("kmer_gather", merged["overflow"])
+        # per-shard finalize already applied the globally-correct min_count
+        # (ownership is total); re-finalizing the gathered table recomputes
+        # extensions from the summed histograms
+        kset = kmer_analysis.finalize(
+            merged, min_count=plan.min_count, policy=plan.policy
+        )
+        return kset, {
+            "table": bool(table_ovf) or bool(merged["overflow"]),
+            "route": int(route_ovf),
+        }
+
+    def align(self, contigs, alive, k: int):
+        from repro.dist import stages
+
+        seed_len = min(k, 27)
+        sidx = alignment.build_seed_index(
+            contigs, alive, seed_len=seed_len, capacity=self.plan.seed_cap
+        )
+        return stages.sharded_align(
+            self.sharded, contigs, sidx, self.mesh,
+            seed_len=seed_len, stride=self.plan.seed_stride,
+        )
+
+    def extend(self, contigs, alive, al, k: int):
+        from repro.dist import stages
+
+        extended, ovf = stages.sharded_extend(
+            self.sharded, contigs, alive, al, self.mesh,
+            mer_sizes=self.plan.ladder(k),
+            capacity=self.plan.walk_capacity,
+            max_ext=self.plan.max_ext,
+            out_factor=self.plan.localize_out_factor,
+        )
+        self._note_overflow("localize", ovf)
+        return extended
+
+    def link_candidates(self, al, contigs, alive):
+        from repro.dist import stages
+
+        cands, ovf = stages.sharded_link_candidates(
+            self.sharded, al, contigs, alive, self.mesh,
+            out_factor=self.plan.localize_out_factor,
+        )
+        self._note_overflow("localize_pairs", ovf)
+        return cands

@@ -1,0 +1,386 @@
+"""AssemblyPlan: one derived capacity plan for the whole pipeline.
+
+Every buffer in this repo is statically shaped (DESIGN.md §1), which used
+to mean ~20 scattered guess-a-power-of-two knobs on `PipelineConfig`
+(`kmer_capacity`, `contig_cap`, `walk_capacity`, `link_capacity`, ...)
+plus a separate `dist.capacity.plan_kmer_budget` for the distributed path.
+`AssemblyPlan` absorbs all of them into one object with two entry points:
+
+  * `AssemblyPlan.from_dataset(reads, k_range, slack=...)` derives every
+    stage capacity from dataset shape (`num_reads`, `max_len`, k-range)
+    the paper's §II-B way — provision from an upfront cardinality
+    estimate, report overflow, never grow dynamically;
+  * `plan_from(cfg)` maps a legacy `PipelineConfig` onto a plan field by
+    field, so `Assembler(plan_from(cfg), Local())` is numerically the old
+    `core.pipeline.assemble(reads, cfg)`.
+
+`plan.bytes()` states the memory bill before any array is allocated —
+the TPU translation of MetaHipMer's upfront provisioning (Table II) and
+the same memory-bounding stance as MEGAHIT's one-CLI memory strategies.
+
+Validation lives here (`validate_assembly_params`) and is shared with the
+`PipelineConfig` shim: bad k-ranges, even k, non-positive capacities, and
+inverted mer ladders fail fast with actionable errors instead of shape
+errors deep in XLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.kmer_analysis import ExtensionPolicy
+from repro.dist import capacity as cap_lib
+
+
+class PlanError(ValueError):
+    """A plan/config parameter is invalid (raised before any tracing)."""
+
+
+def _ladder(k: int, step: int) -> tuple:
+    """Mer-size ladder for the dynamic walk (§II-G); shared with the
+    legacy `PipelineConfig.ladder`."""
+    return (max(11, k - step), k, min(k + step, 27))
+
+
+def validate_assembly_params(
+    *,
+    k_min: int,
+    k_max: int,
+    k_step: int,
+    min_count: int,
+    kmer_capacity: int,
+    contig_cap: int,
+    max_contig_len: int,
+    walk_capacity: int,
+    link_capacity: int,
+    max_scaffold_len: int,
+    max_members: int,
+    max_ext: int,
+    walk_ladder_step: int,
+    seed_stride: int,
+    where: str = "AssemblyPlan",
+) -> None:
+    """Reject invalid parameters with actionable errors (fail fast)."""
+    if k_min > k_max:
+        raise PlanError(
+            f"{where}: k_min={k_min} > k_max={k_max}; the iterative-k "
+            f"schedule runs k_min..k_max and must be non-empty"
+        )
+    if k_step <= 0:
+        raise PlanError(f"{where}: k_step={k_step} must be positive")
+    ks = list(range(k_min, k_max + 1, k_step))
+    for k in ks:
+        if k % 2 == 0:
+            raise PlanError(
+                f"{where}: k={k} is even; even k makes a k-mer equal its "
+                f"own reverse complement, breaking canonicalization — use "
+                f"odd k (adjust k_min/k_step)"
+            )
+        if not 3 <= k <= 31:
+            raise PlanError(
+                f"{where}: k={k} outside the dual-lane packing range "
+                f"3..31 (DESIGN.md §2)"
+            )
+        lo, mid, hi = _ladder(k, walk_ladder_step)
+        if not lo < mid < hi:
+            raise PlanError(
+                f"{where}: walk ladder {(lo, mid, hi)} for k={k} is not "
+                f"strictly increasing; the dynamic mer-walk needs a rung "
+                f"below and above k (11 < k < 27 with "
+                f"walk_ladder_step={walk_ladder_step})"
+            )
+        # the (contig, mer) walk tables embed the contig id in the spare
+        # high bits of the dual-lane key (kmer.embed_tag); the ladder's
+        # top rung fixes how many bits are spare
+        tag_bits = min(16, 62 - 2 * hi)
+        if contig_cap > (1 << tag_bits):
+            raise PlanError(
+                f"{where}: contig_cap={contig_cap} exceeds the (contig, "
+                f"mer) tag space 2**{tag_bits} left by the k={k} walk "
+                f"ladder (top rung {hi}); lower contig_cap or "
+                f"walk_ladder_step"
+            )
+    caps = {
+        "min_count": min_count,
+        "kmer_capacity": kmer_capacity,
+        "contig_cap": contig_cap,
+        "max_contig_len": max_contig_len,
+        "walk_capacity": walk_capacity,
+        "link_capacity": link_capacity,
+        "max_scaffold_len": max_scaffold_len,
+        "max_members": max_members,
+        "max_ext": max_ext,
+        "seed_stride": seed_stride,
+    }
+    for name, v in caps.items():
+        if int(v) <= 0:
+            raise PlanError(
+                f"{where}: {name}={v} must be positive — capacities are "
+                f"static buffer sizes chosen before data is seen "
+                f"(DESIGN.md §3.4)"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class AssemblyPlan:
+    """Per-stage, per-shard capacity plan + algorithm knobs for one run.
+
+    Capacities are global unless suffixed otherwise; the per-shard numbers
+    (`pre_capacity`, `shard_table_capacity`, `route_capacity`) only matter
+    when executing on a `Mesh` context and default to values derived from
+    the global plan and `num_shards`.
+    """
+
+    # --- k schedule + thresholds (Alg. 1) ---
+    k_min: int = 17
+    k_max: int = 21
+    k_step: int = 4
+    min_count: int = 2
+    policy: ExtensionPolicy = ExtensionPolicy()
+    contig_pseudo_weight: int = 4
+    low_memory: bool = False
+    # --- pruning ---
+    prune_alpha: float = 0.25
+    prune_beta: float = 0.5
+    # --- alignment ---
+    seed_stride: int = 16
+    # --- local assembly ---
+    walk_ladder_step: int = 4
+    max_ext: int = 64
+    run_local_assembly: bool = True
+    # --- scaffolding ---
+    min_link_support: int = 2
+    max_members: int = 32
+    # --- capacities (global) ---
+    kmer_capacity: int = 1 << 15
+    contig_cap: int = 512
+    max_contig_len: int = 4096
+    seed_capacity: Optional[int] = None   # default: 2 * kmer_capacity
+    walk_capacity: int = 1 << 16
+    link_capacity: int = 1 << 12
+    max_scaffold_len: int = 1 << 13
+    # --- distributed execution (Mesh) ---
+    num_shards: int = 1
+    slack: float = 2.0
+    pre_capacity: Optional[int] = None          # per-shard pre-combine rows
+    shard_table_capacity: Optional[int] = None  # per-shard owner-table rows
+    route_capacity: Optional[int] = None        # per-(sender, dest) rows
+    localize_out_factor: int = 2
+    # dataset shape (num_reads, max_len) — recorded by `from_dataset` /
+    # `bind` so `bytes()` can price the read-proportional buffers
+    dataset_shape: Optional[tuple] = None
+
+    def __post_init__(self):
+        validate_assembly_params(
+            k_min=self.k_min, k_max=self.k_max, k_step=self.k_step,
+            min_count=self.min_count, kmer_capacity=self.kmer_capacity,
+            contig_cap=self.contig_cap, max_contig_len=self.max_contig_len,
+            walk_capacity=self.walk_capacity,
+            link_capacity=self.link_capacity,
+            max_scaffold_len=self.max_scaffold_len,
+            max_members=self.max_members, max_ext=self.max_ext,
+            walk_ladder_step=self.walk_ladder_step,
+            seed_stride=self.seed_stride, where="AssemblyPlan",
+        )
+        if self.num_shards < 1:
+            raise PlanError(f"AssemblyPlan: num_shards={self.num_shards} < 1")
+        for name in ("seed_capacity", "pre_capacity",
+                     "shard_table_capacity", "route_capacity"):
+            v = getattr(self, name)
+            if v is not None and int(v) <= 0:
+                raise PlanError(
+                    f"AssemblyPlan: {name}={v} must be positive (or None "
+                    f"to derive it) — capacities are static buffer sizes "
+                    f"(DESIGN.md §3.4)"
+                )
+        if self.localize_out_factor < 1:
+            raise PlanError(
+                f"AssemblyPlan: localize_out_factor="
+                f"{self.localize_out_factor} < 1 would drop reads by "
+                f"construction"
+            )
+        if self.slack <= 0:
+            raise PlanError(f"AssemblyPlan: slack={self.slack} must be > 0")
+
+    # ---- schedule helpers (shared with the PipelineConfig shim) ----
+
+    def ks(self) -> list:
+        return list(range(self.k_min, self.k_max + 1, self.k_step))
+
+    def ladder(self, k: int) -> tuple:
+        return _ladder(k, self.walk_ladder_step)
+
+    # ---- derived per-shard capacities ----
+
+    @property
+    def seed_cap(self) -> int:
+        return self.seed_capacity or 2 * self.kmer_capacity
+
+    @property
+    def pre_cap(self) -> int:
+        """Per-shard local pre-combine table rows (Mesh k-mer analysis)."""
+        if self.pre_capacity is not None:
+            return self.pre_capacity
+        return max(1 << 8, cap_lib.next_pow2(-(-self.kmer_capacity
+                                               // self.num_shards)) * 2)
+
+    @property
+    def shard_table_cap(self) -> int:
+        """Per-shard owner-table rows (hash ownership splits ~evenly)."""
+        if self.shard_table_capacity is not None:
+            return self.shard_table_capacity
+        return self.pre_cap
+
+    @property
+    def route_cap(self) -> int:
+        if self.route_capacity is not None:
+            return self.route_capacity
+        return cap_lib.default_route_capacity(
+            self.pre_cap, self.num_shards, slack=self.slack
+        )
+
+    # ---- construction ----
+
+    @classmethod
+    def from_dataset(
+        cls,
+        reads,
+        k_range: tuple = (17, 21, 4),
+        *,
+        num_shards: int = 1,
+        slack: float = 2.0,
+        unique_rate: float = 0.5,
+        **overrides,
+    ) -> "AssemblyPlan":
+        """Size every stage capacity from dataset shape (§II-B).
+
+        Args:
+          reads: anything with `num_reads` / `max_len` (ReadSet,
+            ShardedReads) — only the shape is read.
+          k_range: (k_min, k_max, k_step) iterative-k schedule.
+          num_shards: planned execution width (1 = Local).
+          slack: the single headroom dial every capacity scales with.
+          unique_rate: expected unique-kmer : occurrence ratio (~1/coverage
+            for clean data; →1 for error-heavy data).
+          overrides: any AssemblyPlan field, overriding the derivation.
+        """
+        if len(k_range) == 2:
+            k_range = (k_range[0], k_range[1], max(k_range[1] - k_range[0], 1))
+        k_min, k_max, k_step = k_range
+        R = int(reads.num_reads)
+        L = int(reads.max_len)
+        p2 = cap_lib.next_pow2
+        windows = max(L - k_min + 1, 1)
+        occ = R * windows                       # k-mer occurrences, k = k_min
+        unique = max(int(unique_rate * occ), 1)
+        # global owner/merged table: unique keys + slack
+        kmer_capacity = max(1 << 10, p2(int(slack * unique)))
+        # contigs: distinct assembled sequences are bounded by the unique
+        # k-mer population over a minimum contig length (~2k at the floor)
+        contig_cap = max(256, p2(int(slack * unique // (2 * k_min))))
+        # assembled bases are bounded by unique k-mers; a single contig can
+        # hold at most all of them (+ walked extensions)
+        max_contig_len = int(min(max(1 << 11, p2(unique // 4)), 1 << 15))
+        # (contig,mer) walk tables: distinct (contig, mer) pairs are
+        # occurrence-collapsed, <= occ/2 in practice; slack buys probe room
+        walk_capacity = max(1 << 12, p2(int(slack * occ / 2)))
+        # link witnesses: <= 1 splint/read + 1 span/pair
+        link_capacity = max(1 << 10, p2(int(slack * 3 * R // 2) // 4))
+        max_scaffold_len = int(min(4 * max_contig_len, 1 << 16))
+        base = dict(
+            k_min=k_min, k_max=k_max, k_step=k_step,
+            kmer_capacity=kmer_capacity,
+            contig_cap=contig_cap,
+            max_contig_len=max_contig_len,
+            walk_capacity=walk_capacity,
+            link_capacity=link_capacity,
+            max_scaffold_len=max_scaffold_len,
+            num_shards=num_shards,
+            slack=slack,
+            dataset_shape=(R, L),
+        )
+        base.update(overrides)
+        if "contig_cap" not in overrides:
+            # respect the (contig, mer) tag-space limit of the walk ladder
+            step = base.get("walk_ladder_step", 4)
+            hi_mer = min(base["k_max"] + step, 27)
+            base["contig_cap"] = min(
+                base["contig_cap"], 1 << min(16, 62 - 2 * hi_mer)
+            )
+        return cls(**base)
+
+    # ---- memory estimate ----
+
+    def stage_bytes(self) -> dict:
+        """Estimated peak static-buffer bytes per stage, per shard.
+
+        Row-size constants mirror the dtypes of the actual buffers:
+        occurrence lanes are 2 x uint32 + 2 x uint8 ext + bool; count
+        tables are keys + count + two 4-wide int32 histograms (48 B); the
+        seed index is a dual-lane DHT + 3 int32/bool side arrays.
+        """
+        R = self.dataset_shape[0] if self.dataset_shape else 0
+        L = self.dataset_shape[1] if self.dataset_shape else 0
+        per_shard_R = -(-R // self.num_shards) if R else 0
+        windows = max(L - self.k_min + 1, 1) if L else 0
+        occ_rows = per_shard_R * windows
+        n_rungs = 3
+        out = {
+            # [R, W] hi/lo/left/right/valid occurrence lanes
+            "kmer_occurrences": occ_rows * 11,
+            # pre-combine + owner/merged count tables (48 B/row) +
+            # finalized KmerSet (keys, count, hists, ext codes, used)
+            "kmer_tables": (self.pre_cap if self.num_shards > 1 else
+                            self.kmer_capacity) * 48
+            + self.kmer_capacity * 48 * 2,
+            "contigs": self.contig_cap * (self.max_contig_len + 12),
+            "seed_index": self.seed_cap * 22,
+            "alignments": per_shard_R * 2 * 20,
+            "walk_tables": n_rungs * self.walk_capacity * 48,
+            "links": self.link_capacity * 24,
+            "scaffolds": self.contig_cap * (
+                self.max_members * 9 + self.max_scaffold_len
+            ),
+        }
+        if self.num_shards > 1:
+            out["route_buffers"] = (
+                self.num_shards * self.route_cap * 56
+                + self.localize_out_factor * per_shard_R * (L + 8)
+            )
+        return out
+
+    def bind(self, reads) -> "AssemblyPlan":
+        """Copy of this plan with the dataset shape attached, so `bytes()`
+        can price the read-proportional buffers."""
+        return dataclasses.replace(
+            self, dataset_shape=(int(reads.num_reads), int(reads.max_len))
+        )
+
+    def bytes(self) -> int:
+        """Estimated peak working-set bytes per shard for one run."""
+        return int(sum(self.stage_bytes().values()))
+
+
+def plan_from(cfg, *, num_shards: int = 1) -> AssemblyPlan:
+    """Map a legacy `PipelineConfig` onto an AssemblyPlan, field by field.
+
+    `Assembler(plan_from(cfg), Local()).assemble(reads)` is numerically
+    identical to the pre-facade `core.pipeline.assemble(reads, cfg)` —
+    asserted in tests/test_api.py.
+    """
+    return AssemblyPlan(
+        k_min=cfg.k_min, k_max=cfg.k_max, k_step=cfg.k_step,
+        min_count=cfg.min_count, policy=cfg.policy,
+        contig_pseudo_weight=cfg.contig_pseudo_weight,
+        low_memory=cfg.low_memory,
+        prune_alpha=cfg.prune_alpha, prune_beta=cfg.prune_beta,
+        seed_stride=cfg.seed_stride,
+        walk_ladder_step=cfg.walk_ladder_step,
+        max_ext=cfg.max_ext, run_local_assembly=cfg.run_local_assembly,
+        min_link_support=cfg.min_link_support, max_members=cfg.max_members,
+        kmer_capacity=cfg.kmer_capacity, contig_cap=cfg.contig_cap,
+        max_contig_len=cfg.max_contig_len,
+        walk_capacity=cfg.walk_capacity, link_capacity=cfg.link_capacity,
+        max_scaffold_len=cfg.max_scaffold_len,
+        num_shards=num_shards,
+    )

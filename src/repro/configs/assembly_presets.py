@@ -1,0 +1,48 @@
+"""Shared assembly plans for examples/benchmarks (single source of truth).
+
+`examples/distributed_assembly.py` and `benchmarks/bench_localization.py`
+used to hand-copy the same `PipelineConfig(...)` literal and drift was a
+matter of time; both now build from here.  These are *presets* for the
+small MGSim communities the walkthroughs use — real datasets should size
+their plan with `AssemblyPlan.from_dataset` instead.
+"""
+from __future__ import annotations
+
+from repro.api import AssemblyPlan
+from repro.core.kmer_analysis import ExtensionPolicy
+
+
+def small_community_plan(**overrides) -> AssemblyPlan:
+    """Single-k contig-generation plan for ~10^2-kb MGSim communities.
+
+    Used by the distributed walkthrough and the localization benchmark:
+    one k (21), no local assembly (the stages under study are k-mer
+    analysis, alignment, and localization), capacities roomy for
+    ~1k x 60 bp reads.
+    """
+    base = dict(
+        k_min=21, k_max=21, k_step=4,
+        kmer_capacity=1 << 15,
+        contig_cap=256,
+        max_contig_len=2048,
+        run_local_assembly=False,
+        policy=ExtensionPolicy(err_rate=0.05),
+    )
+    base.update(overrides)
+    return AssemblyPlan(**base)
+
+
+def quality_plan(**overrides) -> AssemblyPlan:
+    """Iterative-k full-pipeline plan for the Table-I style quality runs."""
+    base = dict(
+        k_min=17, k_max=21, k_step=4,
+        kmer_capacity=1 << 15,
+        contig_cap=512,
+        max_contig_len=2048,
+        walk_capacity=1 << 16,
+        link_capacity=1 << 11,
+        max_scaffold_len=1 << 12,
+        policy=ExtensionPolicy(err_rate=0.05),
+    )
+    base.update(overrides)
+    return AssemblyPlan(**base)

@@ -51,6 +51,31 @@ def occurrences(reads: ReadSet, *, k: int):
     return flat(chi), flat(clo), flat(cleft), flat(cright), flat(valid)
 
 
+def pseudo_count_table(bases, lengths, *, k: int, capacity: int,
+                       weight: int) -> dict:
+    """Pseudo-counted k-mer table from dense sequence rows (§II-H).
+
+    The cross-iteration evidence carrier: contig (k+s)-mers enter the next
+    round's count table weighted by `weight`, so they survive the
+    count/extension thresholds where read support is thin.  Shared by the
+    Local merge path and the Mesh owner exchange — the S=1 oracle test
+    relies on both using exactly this weighting.
+    """
+    seqs = ReadSet(
+        bases=bases, lengths=lengths,
+        mate=jnp.full(lengths.shape, -1, jnp.int32), insert_size=0,
+    )
+    hi, lo, left, right, valid = occurrences(seqs, k=k)
+    tab = count_occurrences(hi, lo, left, right, valid, capacity=capacity)
+    w = jnp.int32(weight)
+    return {
+        **tab,
+        "count": tab["count"] * w,
+        "left_cnt": tab["left_cnt"] * w,
+        "right_cnt": tab["right_cnt"] * w,
+    }
+
+
 def _group_segments(shi, slo, sv):
     """Boundary flags + segment ids of equal-key runs in sorted order."""
     prev_ne = jnp.concatenate(

@@ -1,46 +1,43 @@
-"""End-to-end MetaHipMer pipeline: Algorithm 1 (iterative contig
-generation) + Algorithm 3 (scaffolding).
+"""DEPRECATED shim over `repro.api` (the unified assembler front door).
 
-  for k = k_min .. k_max step s:
-    1. k-mer analysis                      (kmer_analysis)
-    2. merge with previous iteration's contig k-mers   (§II-H)
-    3. de Bruijn traversal -> contigs      (dbg)
-    4. bubble merging + hair removal       (bubble)
-    5. iterative graph pruning             (pruning)
-    6. align reads to contigs              (alignment)
-    7. local assembly / mer-walk extension (local_assembly)
-  then scaffold: links -> traversal -> gap closing      (scaffolding, gap_closing)
+The end-to-end pipeline (Algorithm 1 iterative contig generation +
+Algorithm 3 scaffolding) now lives in `repro.api.Assembler`, driven by an
+`AssemblyPlan` capacity plan and an execution context (`Local` or
+`Mesh`).  This module keeps the historical entry points working:
 
-Contig k-mers from iteration i enter iteration i+1 as pseudo-count
-"error-free" (k+s)-mers (§II-H): their extension context comes from the
-contig sequence itself, weighted so they survive the count/extension
-thresholds where read support is thin, while strong read evidence still
-dominates the merged histograms.
+    assemble(reads, cfg)  ==  Assembler(plan_from(cfg), Local()).assemble(reads)
+
+bit for bit (asserted in tests/test_api.py).  New code should use:
+
+    from repro.api import Assembler, AssemblyPlan, Local, Mesh
+    plan = AssemblyPlan.from_dataset(reads, (17, 21, 4))
+    out = Assembler(plan, Local()).assemble(reads)
+
+`PipelineConfig` remains as the legacy knob bag; it validates eagerly
+(same rules as AssemblyPlan) and maps onto a plan via `plan_from`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import warnings
 
-import jax.numpy as jnp
+from repro.api import assembler as _assembler
+from repro.api import plan as _plan_lib
+from repro.api.assembler import IterationStats, extract_contig_kmers  # noqa: F401  (re-exported API)
+from repro.api.context import Local
+from repro.api.plan import plan_from
 
-from . import (
-    alignment,
-    bubble,
-    dbg,
-    gap_closing,
-    kmer,
-    kmer_analysis,
-    local_assembly,
-    pruning,
-    scaffolding,
-)
 from .kmer_analysis import ExtensionPolicy
-from .types import ContigSet, ReadSet
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
+    """Legacy configuration (DEPRECATED: prefer `repro.api.AssemblyPlan`).
+
+    Kept as a thin, validated knob bag that `plan_from` maps onto an
+    `AssemblyPlan` field by field.
+    """
+
     # iterative contig generation (Alg. 1)
     k_min: int = 17
     k_max: int = 21
@@ -68,183 +65,59 @@ class PipelineConfig:
     max_scaffold_len: int = 1 << 13
     run_local_assembly: bool = True
 
+    def __post_init__(self):
+        _plan_lib.validate_assembly_params(
+            k_min=self.k_min, k_max=self.k_max, k_step=self.k_step,
+            min_count=self.min_count, kmer_capacity=self.kmer_capacity,
+            contig_cap=self.contig_cap, max_contig_len=self.max_contig_len,
+            walk_capacity=self.walk_capacity,
+            link_capacity=self.link_capacity,
+            max_scaffold_len=self.max_scaffold_len,
+            max_members=self.max_members, max_ext=self.max_ext,
+            walk_ladder_step=self.walk_ladder_step,
+            seed_stride=self.seed_stride, where="PipelineConfig",
+        )
+
     def ks(self):
         return list(range(self.k_min, self.k_max + 1, self.k_step))
 
     def ladder(self, k: int) -> tuple:
-        s = self.walk_ladder_step
-        return (max(11, k - s), k, min(k + s, 27))
+        return _plan_lib._ladder(k, self.walk_ladder_step)
 
 
-def extract_contig_kmers(contigs: ContigSet, alive, *, k: int, capacity: int,
-                         weight: int):
-    """(k+s)-mer pseudo-count table from a contig set (§II-H)."""
-    lengths = jnp.where(alive, contigs.lengths, 0)
-    hi, lo, valid, left, right = kmer.extract_kmers(contigs.bases, lengths, k=k)
-    chi, clo, cleft, cright, _ = kmer.canonicalize_occurrences(
-        hi, lo, left, right, k=k
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"core.pipeline.{name} is deprecated; use repro.api.Assembler "
+        f"with an AssemblyPlan (see DESIGN.md §6)",
+        DeprecationWarning,
+        stacklevel=3,
     )
-    flat = lambda x: x.reshape((-1,))
-    tab = kmer_analysis.count_occurrences(
-        flat(chi), flat(clo), flat(cleft), flat(cright), flat(valid),
-        capacity=capacity,
-    )
-    w = jnp.int32(weight)
-    return {
-        **tab,
-        "count": tab["count"] * w,
-        "left_cnt": tab["left_cnt"] * w,
-        "right_cnt": tab["right_cnt"] * w,
-    }
 
 
-@dataclasses.dataclass
-class IterationStats:
-    k: int
-    n_kmers: int
-    n_contigs: int
-    n_bubbles: int
-    n_hair: int
-    n_pruned: int
-    aligned_frac: float
-    extended_bases: int
-    overflow: bool
+def contig_generation_round(reads, cfg: PipelineConfig, k: int, prev_tab):
+    """DEPRECATED: one Algorithm-1 iteration on the Local context.
+
+    `prev_tab` is a pseudo-count table dict (see `extract_contig_kmers`).
+    Returns (contigs, alive, al, stats) exactly as before.
+    """
+    _warn("contig_generation_round")
+    asm = _assembler.Assembler(plan_from(cfg), Local())
+    asm.ctx.prepare(reads, asm.plan)
+    return asm._round(k, prev_tab)
 
 
-def contig_generation_round(
-    reads: ReadSet,
-    cfg: PipelineConfig,
-    k: int,
-    prev_tab: Optional[dict],
-):
-    """One iteration of Algorithm 1; returns (contigs, alive, tab, stats)."""
-    hi, lo, left, right, valid = kmer_analysis.occurrences(reads, k=k)
-    if cfg.low_memory:
-        valid = kmer_analysis.admit_two_sightings(
-            hi, lo, valid, bloom_bits=max(1 << 16, cfg.kmer_capacity * 8)
-        )
-    tab = kmer_analysis.count_occurrences(
-        hi, lo, left, right, valid, capacity=cfg.kmer_capacity
-    )
-    if prev_tab is not None:
-        tab = kmer_analysis.merge_counts(tab, prev_tab, capacity=cfg.kmer_capacity)
-    kset = kmer_analysis.finalize(tab, min_count=cfg.min_count, policy=cfg.policy)
-    index = dbg.build_index(kset)
-    trav = dbg.traverse(
-        kset, index, k=k, contig_cap=cfg.contig_cap, max_len=cfg.max_contig_len
-    )
-    contigs = trav.contigs
-    ends = dbg.end_neighbor_forks(
-        kset, index, trav, k=k, contig_cap=cfg.contig_cap
-    )
-    bub = bubble.merge_bubbles(
-        contigs.lengths, contigs.depths, ends, k=k
-    )
-    prn = pruning.prune(
-        contigs.lengths,
-        contigs.depths,
-        ends,
-        bub.alive,
-        k=k,
-        num_kmers=cfg.kmer_capacity,
-        alpha=cfg.prune_alpha,
-        beta=cfg.prune_beta,
-    )
-    alive = prn.alive
-    # align + local assembly
-    seed_len = min(k, 27)
-    sidx = alignment.build_seed_index(
-        contigs, alive, seed_len=seed_len, capacity=2 * cfg.kmer_capacity
-    )
-    al = alignment.align_reads(
-        reads, contigs, sidx, seed_len=seed_len, stride=cfg.seed_stride
-    )
-    ext_bases = 0
-    if cfg.run_local_assembly:
-        old_total = int(jnp.where(alive, contigs.lengths, 0).sum())
-        contigs, walk = local_assembly.extend_contigs(
-            reads,
-            contigs,
-            alive,
-            al.contig[:, 0],
-            mer_sizes=cfg.ladder(k),
-            capacity=cfg.walk_capacity,
-            max_ext=cfg.max_ext,
-        )
-        ext_bases = int(jnp.where(alive, contigs.lengths, 0).sum()) - old_total
-    stats = IterationStats(
-        k=k,
-        n_kmers=int(kset.used.sum()),
-        n_contigs=int(alive.sum()),
-        n_bubbles=int(bub.merged_away.sum()),
-        n_hair=int(bub.hair.sum()),
-        n_pruned=int(prn.pruned),
-        aligned_frac=float((al.contig[:, 0] >= 0).mean()),
-        extended_bases=ext_bases,
-        overflow=bool(tab["overflow"]) or bool(trav.overflow),
-    )
-    return contigs, alive, al, stats
+def iterative_contig_generation(reads, cfg: PipelineConfig):
+    """DEPRECATED: Algorithm 1 via the unified facade (Local context)."""
+    _warn("iterative_contig_generation")
+    asm = _assembler.Assembler(plan_from(cfg), Local())
+    return asm.contig_rounds(reads)
 
 
-def iterative_contig_generation(reads: ReadSet, cfg: PipelineConfig):
-    """Algorithm 1."""
-    prev_tab = None
-    contigs, alive, al = None, None, None
-    all_stats = []
-    ks = cfg.ks()
-    for i, k in enumerate(ks):
-        contigs, alive, al, stats = contig_generation_round(
-            reads, cfg, k, prev_tab
-        )
-        all_stats.append(stats)
-        if i + 1 < len(ks):
-            prev_tab = extract_contig_kmers(
-                contigs, alive, k=ks[i + 1], capacity=cfg.kmer_capacity,
-                weight=cfg.contig_pseudo_weight,
-            )
-    return contigs, alive, al, all_stats
+def assemble(reads, cfg: PipelineConfig, hmm_hit=None):
+    """DEPRECATED: full pipeline via the unified facade (Local context).
 
-
-def assemble(reads: ReadSet, cfg: PipelineConfig, hmm_hit=None):
-    """Full pipeline: Algorithm 1 + Algorithm 3. Returns a dict of results."""
-    contigs, alive, _, stats = iterative_contig_generation(reads, cfg)
-    # fresh alignment against the final contigs (Alg. 3 line 3)
-    k_last = cfg.ks()[-1]
-    seed_len = min(k_last, 27)
-    sidx = alignment.build_seed_index(
-        contigs, alive, seed_len=seed_len, capacity=2 * cfg.kmer_capacity
-    )
-    al = alignment.align_reads(
-        reads, contigs, sidx, seed_len=seed_len, stride=cfg.seed_stride
-    )
-    scaffs, links, suspended, comp = scaffolding.scaffold(
-        al,
-        reads,
-        contigs,
-        alive,
-        link_capacity=cfg.link_capacity,
-        min_support=cfg.min_link_support,
-        max_members=cfg.max_members,
-        hmm_hit=hmm_hit,
-    )
-    seqs = gap_closing.close_and_render(
-        scaffs,
-        contigs,
-        reads,
-        al.contig[:, 0],
-        seed_len=min(k_last, 25),
-        mer_sizes=cfg.ladder(k_last),
-        walk_capacity=cfg.walk_capacity,
-        max_scaffold_len=cfg.max_scaffold_len,
-    )
-    return {
-        "contigs": contigs,
-        "alive": alive,
-        "alignments": al,
-        "scaffolds": scaffs,
-        "scaffold_seqs": seqs,
-        "links": links,
-        "suspended": suspended,
-        "components": comp,
-        "stats": stats,
-    }
+    Identical results to `Assembler(plan_from(cfg), Local()).assemble`.
+    """
+    _warn("assemble")
+    asm = _assembler.Assembler(plan_from(cfg), Local())
+    return asm.assemble(reads, hmm_hit=hmm_hit)

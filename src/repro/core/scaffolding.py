@@ -173,18 +173,28 @@ def aggregate_links(ea, eb, gap, valid, is_splint, *, capacity: int) -> Links:
     )
 
 
-def build_links(al, reads: ReadSet, contigs: ContigSet, alive, *,
-                capacity: int, min_support: int = 2) -> Links:
-    clens = jnp.where(alive, contigs.lengths, 0)
-    sa, sb, sg, sv = find_splints(al, reads, clens)
-    pa, pb, pg, pv = find_spans(al, reads, clens)
+def candidate_links(al, reads: ReadSet, contig_lengths):
+    """Per-read link witnesses: splints + spans as flat candidate arrays.
+
+    This is the read-proportional half of link building — pure per-read
+    arithmetic over the aligner's hits, no contig-graph state.  On a mesh it
+    runs per shard over that shard's (localized) read block (DESIGN.md §6);
+    the returned (end_a, end_b, gap, valid, is_splint) arrays concatenate
+    across shards before `links_from_candidates`.
+    """
+    sa, sb, sg, sv = find_splints(al, reads, contig_lengths)
+    pa, pb, pg, pv = find_spans(al, reads, contig_lengths)
     ea = jnp.concatenate([sa, pa])
     eb = jnp.concatenate([sb, pb])
     gap = jnp.concatenate([sg, pg])
     valid = jnp.concatenate([sv, pv])
-    is_splint = jnp.concatenate(
-        [jnp.ones_like(sv), jnp.zeros_like(pv)]
-    )
+    is_splint = jnp.concatenate([jnp.ones_like(sv), jnp.zeros_like(pv)])
+    return ea, eb, gap, valid, is_splint
+
+
+def links_from_candidates(ea, eb, gap, valid, is_splint, alive, *,
+                          capacity: int, min_support: int = 2) -> Links:
+    """Aggregate candidate witnesses into the link store (contig scale)."""
     # drop links touching dead contigs
     ca = jnp.clip(ea // 2, 0)
     cb2 = jnp.clip(eb // 2, 0)
@@ -192,6 +202,15 @@ def build_links(al, reads: ReadSet, contigs: ContigSet, alive, *,
     links = aggregate_links(ea, eb, gap, valid, is_splint, capacity=capacity)
     # the paper prunes low-multiplicity links BEFORE CC to expose parallelism
     return links._replace(valid=links.valid & (links.support >= min_support))
+
+
+def build_links(al, reads: ReadSet, contigs: ContigSet, alive, *,
+                capacity: int, min_support: int = 2) -> Links:
+    clens = jnp.where(alive, contigs.lengths, 0)
+    cands = candidate_links(al, reads, clens)
+    return links_from_candidates(
+        *cands, alive, capacity=capacity, min_support=min_support
+    )
 
 
 def _per_end_links(links: Links, n_ends: int):
@@ -388,25 +407,22 @@ def form_scaffolds(matched_end, end_gap, alive, *, n_contigs: int,
     )
 
 
-def scaffold(
-    al,
-    reads: ReadSet,
+def scaffold_from_links(
+    links: Links,
     contigs: ContigSet,
     alive,
+    insert_size: float,
     *,
-    link_capacity: int = 1 << 12,
-    min_support: int = 2,
     max_members: int = 32,
     hmm_hit=None,
 ):
-    """Algorithm 3 minus gap closing (see gap_closing.py)."""
+    """Contig-scale half of Algorithm 3: suspension -> CC -> matching ->
+    chain formation.  Runs replicated on a mesh (contig state is small);
+    the read-proportional link witnesses arrive via `candidate_links`."""
     C = contigs.capacity
     n_ends = 2 * C
-    links = build_links(
-        al, reads, contigs, alive, capacity=link_capacity, min_support=min_support
-    )
     links, suspended = suspend_repeats(
-        links, contigs.lengths, float(reads.insert_size), n_ends
+        links, contigs.lengths, float(insert_size), n_ends
     )
     if hmm_hit is None:
         hmm_hit = jnp.zeros((C,), bool)
@@ -423,3 +439,24 @@ def scaffold(
         matched_end, end_gap, alive_eff, n_contigs=C, max_members=max_members
     )
     return scaffs, links, suspended, comp
+
+
+def scaffold(
+    al,
+    reads: ReadSet,
+    contigs: ContigSet,
+    alive,
+    *,
+    link_capacity: int = 1 << 12,
+    min_support: int = 2,
+    max_members: int = 32,
+    hmm_hit=None,
+):
+    """Algorithm 3 minus gap closing (see gap_closing.py)."""
+    links = build_links(
+        al, reads, contigs, alive, capacity=link_capacity, min_support=min_support
+    )
+    return scaffold_from_links(
+        links, contigs, alive, float(reads.insert_size),
+        max_members=max_members, hmm_hit=hmm_hit,
+    )

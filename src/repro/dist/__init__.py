@@ -6,6 +6,7 @@ exchange for k-mer stores (§II-A), read localization (§II-I), and the
 per-shard capacity discipline that keeps weak scaling flat (Table II).
 """
 from . import capacity, pipeline
+from . import stages  # noqa: F401  (distributed stages beyond k-mer analysis)
 from .pipeline import (
     ShardedReads,
     data_mesh,
@@ -19,6 +20,7 @@ from .pipeline import (
 __all__ = [
     "ShardedReads",
     "capacity",
+    "stages",
     "data_mesh",
     "distributed_kmer_analysis",
     "gather_ksets",

@@ -22,19 +22,14 @@ dropped (repro.dist.capacity, DESIGN.md §3.4).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
-from repro.core import exchange, kmer, kmer_analysis
+from repro.core import kmer, kmer_analysis
 from repro.core.kmer_analysis import ExtensionPolicy
-from repro.core.types import INVALID_BASE, KmerSet, ReadSet
+from repro.core.types import INVALID_BASE, KmerSet
 from repro.launch import mesh as mesh_lib
-from . import capacity as cap_lib
 
 AXIS = "data"
 
@@ -147,51 +142,14 @@ def distributed_kmer_analysis(
         table_overflow: scalar int32, count of shard tables (pre or owner)
           whose unique-key population exceeded their budget.
     """
+    from . import stages
+
     S = mesh_shards(mesh)
-    if route_capacity is None:
-        route_capacity = cap_lib.default_route_capacity(pre_capacity, S)
-    sharded = shard_reads(reads, S)
-
-    def body(bases, lengths):
-        local = ReadSet(
-            bases=bases, lengths=lengths,
-            mate=jnp.full(lengths.shape, -1, jnp.int32), insert_size=0,
-        )
-        hi, lo, left, right, valid = kmer_analysis.occurrences(local, k=k)
-        pre = kmer_analysis.count_occurrences(
-            hi, lo, left, right, valid, capacity=pre_capacity
-        )
-        pre_valid = pre["count"] > 0
-        dest = kmer_owner(pre["hi"], pre["lo"], S)
-        res = exchange.route(
-            dest,
-            (pre["hi"], pre["lo"], pre["count"], pre["left_cnt"],
-             pre["right_cnt"]),
-            pre_valid,
-            num_shards=S,
-            capacity=route_capacity,
-            axis_name=AXIS,
-        )
-        rhi, rlo, rcnt, rl, rr = res.payload
-        tab = kmer_analysis.aggregate_weighted(
-            rhi, rlo, rcnt, rl, rr, res.valid, capacity=capacity
-        )
-        kset = kmer_analysis.finalize(tab, min_count=min_count, policy=policy)
-        table_ovf = jax.lax.psum(
-            pre["overflow"].astype(jnp.int32)
-            + tab["overflow"].astype(jnp.int32),
-            AXIS,
-        )
-        return kset, res.overflow, table_ovf
-
-    fn = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(AXIS), P(AXIS)),
-        out_specs=(P(AXIS), P(), P()),
-        check_rep=False,
+    return stages.sharded_kmer_analysis(
+        shard_reads(reads, S), mesh, k=k,
+        pre_capacity=pre_capacity, capacity=capacity,
+        route_capacity=route_capacity, min_count=min_count, policy=policy,
     )
-    return fn(sharded.bases, sharded.lengths)
 
 
 def gather_ksets(kset: KmerSet, *, capacity: int) -> dict:
@@ -231,11 +189,11 @@ def localize_reads(reads, aln_contig, mesh, *, out_factor: int = 2):
       exceeded a destination's budget — route lanes or the receiver block
       (reported, not resent).
     """
+    from . import stages
+
     S = mesh_shards(mesh)
     R = reads.bases.shape[0]
     assert R % S == 0, f"reads rows {R} not divisible by {S}; use shard_reads"
-    per = R // S
-    out_per = out_factor * per
     valid = getattr(reads, "valid", None)
     if valid is None:
         valid = reads.lengths > 0
@@ -244,42 +202,14 @@ def localize_reads(reads, aln_contig, mesh, *, out_factor: int = 2):
         aln = jnp.concatenate(
             [aln, jnp.full((R - aln.shape[0],), -1, jnp.int32)]
         )
-
-    # Per-destination route lanes sized so the receive buffer (S *
-    # route_cap rows) stays proportional to the per-shard OUTPUT block,
-    # not to the global read count — anything past the receiver's out_per
-    # budget would be cut at compact() anyway, so lanes wider than
-    # ~out_per/S per sender only buy memory, not reads.  2x slack absorbs
-    # sender skew; `min(per, ...)` because a sender holds only `per` rows.
-    route_cap = min(per, -(-2 * out_per // S))
-
-    def body(bases, lengths, valid, aln):
-        me = jax.lax.axis_index(AXIS)
-        dest = jnp.where(aln >= 0, aln % S, me).astype(jnp.int32)
-        res = exchange.route(
-            dest, (bases, lengths), valid,
-            num_shards=S, capacity=route_cap, axis_name=AXIS,
-        )
-        (rb, rl), rv, ovf = exchange.compact(
-            res.payload, res.valid, capacity=out_per
-        )
-        rb = jnp.where(rv[:, None], rb, jnp.uint8(INVALID_BASE))
-        total_ovf = res.overflow + jax.lax.psum(ovf, AXIS)
-        return rb, rl, rv, total_ovf
-
-    fn = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
-        out_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
-        check_rep=False,
+    mate = getattr(reads, "mate", None)
+    if mate is None:
+        mate = jnp.full((R,), -1, jnp.int32)
+    sharded = ShardedReads(
+        bases=reads.bases, lengths=reads.lengths, mate=mate,
+        insert_size=reads.insert_size, valid=valid,
     )
-    rb, rl, rv, overflow = fn(reads.bases, reads.lengths, valid, aln)
-    localized = ShardedReads(
-        bases=rb,
-        lengths=rl,
-        mate=jnp.full((S * out_per,), -1, jnp.int32),
-        insert_size=reads.insert_size,
-        valid=rv,
+    localized, _, overflow = stages.localize_with(
+        sharded, aln, (), mesh, out_factor=out_factor
     )
     return localized, overflow

@@ -1,0 +1,446 @@
+"""Distributed pipeline stages beyond k-mer analysis (DESIGN.md §6).
+
+`dist.pipeline` established the paper's three distributed mechanisms for
+ONE stage (k-mer analysis).  This module extends them to the whole
+pipeline so `Assembler(plan, Mesh(S)).assemble(reads)` runs Algorithm 1 +
+Algorithm 3 end to end on a mesh:
+
+  * `sharded_kmer_analysis` — Alg. 2 owner exchange, now also carrying the
+    previous iteration's *contig* k-mers (§II-H): each shard extracts and
+    pre-combines pseudo-counted k-mers from its block of contig rows and
+    routes them to the same hash owners as the read k-mers, so the merged
+    per-owner table is globally correct before finalize.
+  * `sharded_align` — each shard aligns its read block against the
+    replicated contig set + seed index (contig state is orders of
+    magnitude smaller than read state; replicating it is the TPU analogue
+    of merAligner's software cache, with zero misses).
+  * `sharded_extend` — §II-G local assembly after read localization: reads
+    route to the shard owning their (mate-projected) aligned contig, each
+    shard mer-walks only the contig ends it owns (c mod S), and the
+    extended rows combine by ownership.
+  * `sharded_link_candidates` — post-localization per-shard scaffolding:
+    read pairs route *atomically* to the owner of their first aligned
+    contig with their alignments as payload, mate pointers are rebuilt
+    from carried global indices, and splint/span witnesses are generated
+    per shard; only the contig-scale link store and matching replicate.
+
+Every stage reports overflow; nothing is silently dropped (§3.4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import alignment, exchange, kmer_analysis, local_assembly
+from repro.core.kmer_analysis import ExtensionPolicy
+from repro.core.scaffolding import candidate_links
+from repro.core.types import ContigSet, INVALID_BASE, ReadSet
+from . import capacity as cap_lib
+from .pipeline import AXIS, ShardedReads, kmer_owner, mesh_shards
+
+
+def _pad_rows(x, rows: int, fill):
+    pad = rows - x.shape[0]
+    if pad <= 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# k-mer analysis with contig-kmer owner exchange (§II-A + §II-H)
+# ---------------------------------------------------------------------------
+
+
+def sharded_kmer_analysis(
+    reads,
+    mesh,
+    *,
+    k: int,
+    pre_capacity: int,
+    capacity: int,
+    route_capacity: Optional[int] = None,
+    min_count: int = 2,
+    policy: ExtensionPolicy = ExtensionPolicy(),
+    prev_contigs=None,
+    contig_weight: int = 4,
+):
+    """Alg. 2 with optional §II-H contig-kmer injection.
+
+    Args:
+      reads: ShardedReads (or any ReadSet whose rows divide the mesh).
+      prev_contigs: optional (ContigSet, alive) from the previous
+        iteration; its k-mers enter the exchange as pseudo-counted
+        partials weighted by `contig_weight`.
+    Returns (kset, route_overflow, table_overflow) exactly like
+    `dist.pipeline.distributed_kmer_analysis`.
+    """
+    S = mesh_shards(mesh)
+    has_contigs = prev_contigs is not None
+    if route_capacity is None:
+        # contig-carrying rounds route TWO pre-combined tables per sender
+        # (read stream + §II-H pseudo-count stream), so the lanes must be
+        # sized for the doubled worst-case holdings
+        route_capacity = cap_lib.default_route_capacity(
+            (2 if has_contigs else 1) * pre_capacity, S
+        )
+    assert reads.bases.shape[0] % S == 0, (
+        f"reads rows {reads.bases.shape[0]} not divisible by {S}; "
+        f"use shard_reads"
+    )
+    contig_args = ()
+    if has_contigs:
+        contigs, calive = prev_contigs
+        C = contigs.capacity
+        c_pad = -(-C // S) * S
+        contig_args = (
+            _pad_rows(contigs.bases, c_pad, INVALID_BASE),
+            _pad_rows(jnp.where(calive, contigs.lengths, 0), c_pad, 0),
+        )
+
+    def body(bases, lengths, *contig_block):
+        local = ReadSet(
+            bases=bases, lengths=lengths,
+            mate=jnp.full(lengths.shape, -1, jnp.int32), insert_size=0,
+        )
+        hi, lo, left, right, valid = kmer_analysis.occurrences(local, k=k)
+        pre = kmer_analysis.count_occurrences(
+            hi, lo, left, right, valid, capacity=pre_capacity
+        )
+        streams = [pre]
+        local_ovf = pre["overflow"].astype(jnp.int32)
+        if has_contigs:
+            cb, cl = contig_block
+            ctab = kmer_analysis.pseudo_count_table(
+                cb, cl, k=k, capacity=pre_capacity, weight=contig_weight,
+            )
+            streams.append(ctab)
+            local_ovf = local_ovf + ctab["overflow"].astype(jnp.int32)
+        cat = lambda key: jnp.concatenate([s[key] for s in streams])
+        phi, plo = cat("hi"), cat("lo")
+        pcnt, plcnt, prcnt = cat("count"), cat("left_cnt"), cat("right_cnt")
+        pvalid = pcnt != 0
+        dest = kmer_owner(phi, plo, S)
+        res = exchange.route(
+            dest,
+            (phi, plo, pcnt, plcnt, prcnt),
+            pvalid,
+            num_shards=S,
+            capacity=route_capacity,
+            axis_name=AXIS,
+        )
+        rhi, rlo, rcnt, rl, rr = res.payload
+        tab = kmer_analysis.aggregate_weighted(
+            rhi, rlo, rcnt, rl, rr, res.valid, capacity=capacity
+        )
+        kset = kmer_analysis.finalize(tab, min_count=min_count, policy=policy)
+        table_ovf = jax.lax.psum(
+            local_ovf + tab["overflow"].astype(jnp.int32), AXIS
+        )
+        return kset, res.overflow, table_ovf
+
+    in_specs = (P(AXIS), P(AXIS)) + (P(AXIS),) * len(contig_args)
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(P(AXIS), P(), P()),
+        check_rep=False,
+    )
+    return fn(reads.bases, reads.lengths, *contig_args)
+
+
+# ---------------------------------------------------------------------------
+# per-shard alignment against replicated contigs
+# ---------------------------------------------------------------------------
+
+
+def sharded_align(
+    sharded: ShardedReads,
+    contigs: ContigSet,
+    sidx: alignment.SeedIndex,
+    mesh,
+    *,
+    seed_len: int,
+    stride: int = 16,
+):
+    """Align every read to the live contigs, one shard per read block.
+
+    The contig set and seed index are replicated (P() specs): per-shard
+    seed lookups are local by construction — the degenerate, zero-miss
+    form of merAligner's remote-bucket cache.  Output arrays are in the
+    global sharded layout, usable directly as full [R, 2] alignments.
+    """
+    S = mesh_shards(mesh)
+    assert sharded.num_reads % S == 0
+    insert_size = int(sharded.insert_size)
+    table = sidx.table
+
+    def body(bases, lengths, slot_hi, slot_lo, used, max_probe,
+             s_contig, s_pos, s_flip, s_multi, cbases, clens, cdepths):
+        local = ReadSet(
+            bases=bases, lengths=lengths,
+            mate=jnp.full(lengths.shape, -1, jnp.int32),
+            insert_size=insert_size,
+        )
+        idx = alignment.SeedIndex(
+            table=table.__class__(slot_hi, slot_lo, used, max_probe),
+            contig=s_contig, pos=s_pos, flip=s_flip, multi=s_multi,
+            seed_len=seed_len,
+        )
+        reps = ContigSet(bases=cbases, lengths=clens, depths=cdepths)
+        return alignment.align_reads(
+            local, reps, idx, seed_len=seed_len, stride=stride
+        )
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS)) + (P(),) * 11,
+        out_specs=P(AXIS),
+        check_rep=False,
+    )
+    return fn(
+        sharded.bases, sharded.lengths,
+        table.slot_hi, table.slot_lo, table.used, table.max_probe,
+        sidx.contig, sidx.pos, sidx.flip, sidx.multi,
+        contigs.bases, contigs.lengths, contigs.depths,
+    )
+
+
+# ---------------------------------------------------------------------------
+# read localization carrying payload (§II-I generalized)
+# ---------------------------------------------------------------------------
+
+
+def localize_with(
+    sharded: ShardedReads,
+    dest_contig,
+    payload: tuple,
+    mesh,
+    *,
+    out_factor: int = 2,
+):
+    """Fig. 3 localization that carries per-read payload to the new shard.
+
+    Each read routes to the shard owning `dest_contig[r]` (c mod S; rows
+    with dest < 0 stay home), along with `payload` columns (alignment
+    rows, global indices, ...).  Returns (localized ShardedReads,
+    routed payload tuple, overflow) — overflow counts reads cut at either
+    the route lanes or the receiver block, reported per §3.4.
+    """
+    S = mesh_shards(mesh)
+    R = sharded.num_reads
+    assert R % S == 0
+    per = R // S
+    out_per = out_factor * per
+    route_cap = min(per, -(-2 * out_per // S))
+    dest_contig = jnp.asarray(dest_contig, jnp.int32)[:R]
+    insert_size = int(sharded.insert_size)
+
+    def body(bases, lengths, valid, dc, *pl):
+        me = jax.lax.axis_index(AXIS)
+        dest = jnp.where(dc >= 0, dc % S, me).astype(jnp.int32)
+        res = exchange.route(
+            dest, (bases, lengths) + pl, valid,
+            num_shards=S, capacity=route_cap, axis_name=AXIS,
+        )
+        routed, rv, ovf = exchange.compact(
+            res.payload, res.valid, capacity=out_per
+        )
+        rb, rl = routed[0], routed[1]
+        rb = jnp.where(rv[:, None], rb, jnp.uint8(INVALID_BASE))
+        total_ovf = res.overflow + jax.lax.psum(ovf, AXIS)
+        return (rb, rl) + tuple(routed[2:]) + (rv, total_ovf)
+
+    n_pl = len(payload)
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS),) * (4 + n_pl),
+        out_specs=(P(AXIS),) * (3 + n_pl) + (P(),),
+        check_rep=False,
+    )
+    out = fn(sharded.bases, sharded.lengths, sharded.valid, dest_contig,
+             *payload)
+    rb, rl = out[0], out[1]
+    routed_pl = out[2:2 + n_pl]
+    rv, overflow = out[2 + n_pl], out[3 + n_pl]
+    localized = ShardedReads(
+        bases=rb,
+        lengths=rl,
+        mate=jnp.full((S * out_per,), -1, jnp.int32),
+        insert_size=insert_size,
+        valid=rv,
+    )
+    return localized, routed_pl, overflow
+
+
+# ---------------------------------------------------------------------------
+# per-shard local assembly of owned contigs (§II-G)
+# ---------------------------------------------------------------------------
+
+
+def sharded_extend(
+    sharded: ShardedReads,
+    contigs: ContigSet,
+    alive,
+    al,
+    mesh,
+    *,
+    mer_sizes: tuple,
+    capacity: int,
+    max_ext: int = 64,
+    out_factor: int = 2,
+):
+    """Localize reads to their contig's owner, mer-walk owned contig ends.
+
+    Contig c is owned by shard c mod S.  A read's effective contig is its
+    own best hit, else its mate's (the §II-G mate projection — computed
+    globally BEFORE localization so mate evidence survives the move).
+    Each shard builds (contig, mer) walk tables from its localized read
+    block only and extends only the contig rows it owns; the extended
+    rows then combine by ownership.  Returns (ContigSet, overflow).
+    """
+    S = mesh_shards(mesh)
+    C = contigs.capacity
+    R = sharded.num_reads
+    aln0 = jnp.asarray(al.contig[:, 0], jnp.int32)[:R]
+    # mate projection on the ORIGINAL layout (global mate indices)
+    global_reads = ReadSet(
+        bases=sharded.bases, lengths=sharded.lengths, mate=sharded.mate,
+        insert_size=sharded.insert_size,
+    )
+    eff = local_assembly.localize_reads(global_reads, aln0)
+    localized, (eff_loc,), overflow = localize_with(
+        sharded, eff, (eff,), mesh, out_factor=out_factor
+    )
+    insert_size = int(sharded.insert_size)
+    mer_sizes = tuple(mer_sizes)
+
+    def body(bases, lengths, eff_c, cbases, clens, cdepths, calive):
+        me = jax.lax.axis_index(AXIS)
+        owned = (jnp.arange(C, dtype=jnp.int32) % S) == me
+        local = ReadSet(
+            bases=bases, lengths=lengths,
+            mate=jnp.full(lengths.shape, -1, jnp.int32),
+            insert_size=insert_size,
+        )
+        reps = ContigSet(bases=cbases, lengths=clens, depths=cdepths)
+        ext, _walk = local_assembly.extend_contigs(
+            local, reps, calive & owned, eff_c,
+            mer_sizes=mer_sizes, capacity=capacity, max_ext=max_ext,
+        )
+        return ext.bases, ext.lengths, ext.depths
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS)) + (P(),) * 4,
+        out_specs=(P(AXIS), P(AXIS), P(AXIS)),
+        check_rep=False,
+    )
+    eb, el, ed = fn(
+        localized.bases, localized.lengths, eff_loc,
+        contigs.bases, contigs.lengths, contigs.depths, alive,
+    )
+    # combine: contig c's row comes from its owner shard (c mod S)
+    owner = jnp.arange(C, dtype=jnp.int32) % S
+    pick = lambda x: x.reshape((S, C) + x.shape[1:])[
+        owner, jnp.arange(C, dtype=jnp.int32)
+    ]
+    combined = ContigSet(bases=pick(eb), lengths=pick(el), depths=pick(ed))
+    return combined, overflow
+
+
+# ---------------------------------------------------------------------------
+# post-localization per-shard scaffolding witnesses (§III-B)
+# ---------------------------------------------------------------------------
+
+
+def sharded_link_candidates(
+    sharded: ShardedReads,
+    al,
+    contigs: ContigSet,
+    alive,
+    mesh,
+    *,
+    out_factor: int = 2,
+):
+    """Per-shard splint/span witnesses over pair-atomically localized reads.
+
+    Read PAIRS route together to the owner of their first aligned contig,
+    carrying both alignment rows and their global indices; mate pointers
+    are rebuilt on arrival from the carried indices (a dropped mate simply
+    invalidates the pair — reported in the overflow count).  Each shard
+    then runs the stock `candidate_links` on its local block; the
+    returned flat witness arrays are already in global layout for
+    `links_from_candidates`.
+    """
+    S = mesh_shards(mesh)
+    R = sharded.num_reads
+    assert R % S == 0
+    per = R // S
+    out_per = out_factor * per
+    insert_size = int(sharded.insert_size)
+
+    aln = jnp.asarray(al.contig[:, :2], jnp.int32)[:R]
+    mate = jnp.asarray(sharded.mate, jnp.int32)[:R]
+    r = jnp.arange(R, dtype=jnp.int32)
+    # pair representative = lower index of the pair (self if unpaired)
+    rep = jnp.where((mate >= 0), jnp.minimum(r, mate), r)
+    other = jnp.where((mate >= 0), jnp.maximum(r, mate), r)
+    a_rep = aln[:, 0][rep]
+    a_other = aln[:, 0][other]
+    # destination contig: first aligned member of the pair; unaligned pairs
+    # stay on the representative's home shard (kept together, harmless)
+    dest_c = jnp.where(a_rep >= 0, a_rep, a_other)
+    gidx = r
+    localized, routed, overflow = localize_with(
+        sharded, dest_c,
+        (gidx, mate, aln, jnp.asarray(al.cstart[:, :2], jnp.int32)[:R],
+         jnp.asarray(al.orient[:, :2], jnp.uint8)[:R]),
+        mesh, out_factor=out_factor,
+    )
+    g_loc, mate_loc, c_loc, s_loc, o_loc = routed
+    clens = jnp.where(alive, contigs.lengths, 0)
+
+    def body(bases, lengths, rv, g, mg, c2, s2, o2, clens_rep):
+        # rebuild mate pointers: local position of the carried global index
+        n = g.shape[0]
+        inv = jnp.full((R,), -1, jnp.int32).at[
+            jnp.where(rv, g, R)
+        ].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+        new_mate = jnp.where(rv & (mg >= 0), inv[jnp.clip(mg, 0)], -1)
+        local = ReadSet(
+            bases=bases,
+            lengths=jnp.where(rv, lengths, 0),
+            mate=new_mate,
+            insert_size=insert_size,
+        )
+        al_loc = alignment.Alignments(
+            contig=jnp.where(rv[:, None], c2, -1),
+            cstart=s2,
+            orient=o2,
+            matches=jnp.zeros_like(c2),
+            overlap=jnp.zeros_like(c2),
+        )
+        return candidate_links(al_loc, local, clens_rep)
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS),) * 8 + (P(),),
+        out_specs=(P(AXIS),) * 5,
+        check_rep=False,
+    )
+    cands = fn(
+        localized.bases, localized.lengths, localized.valid,
+        g_loc, mate_loc, c_loc, s_loc, o_loc, clens,
+    )
+    return cands, overflow

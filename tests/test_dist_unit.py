@@ -111,3 +111,54 @@ def test_plan_kmer_budget_shapes():
     assert 1 <= b.route_capacity <= b.pre_capacity
     assert b.recv_rows() == 8 * b.route_capacity
     assert b.bytes_per_shard() > 0
+
+
+def test_sharded_kmer_analysis_contig_injection_single_shard_oracle():
+    """§II-H on the mesh path: contig k-mers enter the owner exchange as
+    pseudo-counted partials; with S=1 the result must equal the Local
+    extract -> merge -> finalize sequence exactly."""
+    from repro.api import extract_contig_kmers
+    from repro.core import pipeline as pipe  # noqa: F401  (shim import path)
+    from repro.core.types import ContigSet
+    from repro.dist import stages
+
+    genome, reads, _ = mgsim.single_genome_reads(4, genome_len=300,
+                                                 coverage=15)
+    # a fake "previous iteration" contig set: the genome itself + a dead row
+    C, L = 4, 512
+    bases = np.full((C, L), 4, np.uint8)
+    bases[0, :300] = np.asarray(genome)
+    contigs = ContigSet(
+        bases=jnp.asarray(bases),
+        lengths=jnp.asarray([300, 0, 0, 0], jnp.int32),
+        depths=jnp.ones((C,), jnp.float32),
+    )
+    alive = jnp.asarray([True, False, False, False])
+
+    mesh = dist.data_mesh(1)
+    kset, route_ovf, tab_ovf = stages.sharded_kmer_analysis(
+        dist.shard_reads(reads, 1), mesh, k=21,
+        pre_capacity=1 << 12, capacity=1 << 12,
+        prev_contigs=(contigs, alive), contig_weight=4,
+    )
+    assert int(route_ovf) == 0 and int(tab_ovf) == 0
+
+    # Local oracle: count reads, merge pseudo-counted contig table, finalize
+    hi, lo, left, right, valid = kmer_analysis.occurrences(reads, k=21)
+    tab = kmer_analysis.count_occurrences(hi, lo, left, right, valid,
+                                          capacity=1 << 12)
+    ctab = extract_contig_kmers(contigs, alive, k=21, capacity=1 << 12,
+                                weight=4)
+    merged = kmer_analysis.merge_counts(tab, ctab, capacity=1 << 12)
+    ref = kmer_analysis.finalize(merged, min_count=2,
+                                 policy=kmer_analysis.ExtensionPolicy())
+
+    got_used = np.asarray(kset.used)
+    ref_used = np.asarray(ref.used)
+    assert got_used.sum() == ref_used.sum()
+    np.testing.assert_array_equal(np.asarray(kset.hi)[got_used],
+                                  np.asarray(ref.hi)[ref_used])
+    np.testing.assert_array_equal(np.asarray(kset.count)[got_used],
+                                  np.asarray(ref.count)[ref_used])
+    np.testing.assert_array_equal(np.asarray(kset.left_ext)[got_used],
+                                  np.asarray(ref.left_ext)[ref_used])

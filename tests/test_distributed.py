@@ -13,7 +13,7 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_devices_script(body: str, ndev: int = 8) -> str:
+def run_devices_script(body: str, ndev: int = 8, timeout: int = 600) -> str:
     script = textwrap.dedent(
         f"""
         import os
@@ -25,10 +25,10 @@ def run_devices_script(body: str, ndev: int = 8) -> str:
         """
     ) + textwrap.dedent(body)
     env = dict(os.environ)
-    env["PYTHONPATH"] = f"{REPO}/src:{REPO}/tests"
+    env["PYTHONPATH"] = f"{REPO}/src:{REPO}/tests:{REPO}"
     out = subprocess.run(
         [sys.executable, "-c", script],
-        capture_output=True, text=True, env=env, timeout=600,
+        capture_output=True, text=True, env=env, timeout=timeout,
     )
     assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
     return out.stdout
@@ -107,6 +107,91 @@ def test_distributed_kmer_analysis_matches_single_shard():
             np.asarray(ref.count)[ru])
         print("DIST KMER OK", got_n)
         """
+    )
+
+
+def test_localize_reads_reports_overflow():
+    """DESIGN.md §3.4: drive out_factor below the needed routing capacity;
+    every dropped read must be COUNTED, never silently lost."""
+    run_devices_script(
+        """
+        from repro.data import mgsim
+        from repro.dist import pipeline as dist
+
+        _, reads, _ = mgsim.single_genome_reads(55, genome_len=300,
+                                                coverage=20)
+        mesh = dist.data_mesh(8)
+        reads8 = dist.shard_reads(reads, 8)
+        R = reads8.num_reads
+        n_valid = int(np.asarray(reads8.valid).sum())
+        # worst-case skew: every read claims contig 0, owned by shard 0 —
+        # shard 0's receive block (out_factor * R/8 rows) cannot hold them
+        aln = jnp.zeros((R,), jnp.int32)
+        localized, ovf = dist.localize_reads(reads8, aln, mesh,
+                                             out_factor=1)
+        delivered = int(np.asarray(localized.valid).sum())
+        ovf = int(ovf)
+        assert ovf > 0, "skewed routing must overflow the receiver budget"
+        # conservation: delivered + reported drops == everything sent
+        assert delivered + ovf == n_valid, (delivered, ovf, n_valid)
+        # roomy budget: same exchange, nothing dropped
+        localized2, ovf2 = dist.localize_reads(reads8, aln, mesh,
+                                               out_factor=8)
+        assert int(ovf2) == 0, int(ovf2)
+        assert int(np.asarray(localized2.valid).sum()) == n_valid
+        print("LOCALIZE OVERFLOW OK", ovf)
+        """
+    )
+
+
+def test_mesh_assemble_matches_local():
+    """Acceptance: Assembler(plan, Mesh(8)).assemble runs the FULL pipeline
+    (contig rounds + scaffolding) on an 8-device mesh, and its scaffold
+    stats match the Local() run within bench_quality's tolerance."""
+    run_devices_script(
+        """
+        import warnings
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.api import Assembler, AssemblyPlan, Local, Mesh
+        from repro.data import mgsim
+        from benchmarks import metrics
+
+        comm = mgsim.sample_community(5, num_genomes=3, genome_len=300,
+                                      abundance_sigma=0.3)
+        reads, _ = mgsim.generate_reads(6, comm, num_pairs=400, read_len=60,
+                                        err_rate=0.003)
+        # localize_out_factor=8: a 3-genome community assembles into a
+        # handful of contigs, so contig ownership (c mod S) is maximally
+        # skewed — give every shard room for the whole read set so the
+        # zero-overflow assertion below is meaningful
+        plan = AssemblyPlan.from_dataset(reads, (17, 21, 4), num_shards=8,
+                                         unique_rate=0.2,
+                                         localize_out_factor=8)
+        out_l = Assembler(plan, Local()).assemble(reads)
+        out_m = Assembler(plan, Mesh(num_shards=8)).assemble(reads)
+
+        def quality(out):
+            lens = np.asarray(out["scaffold_seqs"].lengths)
+            bases = np.asarray(out["scaffold_seqs"].bases)
+            pieces = [bases[i, : lens[i]] for i in range(len(lens))
+                      if lens[i] >= 60]
+            return metrics.evaluate(pieces, comm.genomes)
+
+        ql, qm = quality(out_l), quality(out_m)
+        print(f"local gf={ql['genome_fraction']:.3f} n50={ql['n50']}")
+        print(f"mesh  gf={qm['genome_fraction']:.3f} n50={qm['n50']}")
+        print(f"mesh overflow: {out_m['overflow']}")
+        # bench_quality tolerance: genome fraction within 0.02
+        assert qm["genome_fraction"] >= ql["genome_fraction"] - 0.02, (ql, qm)
+        assert qm["misassemblies"] <= ql["misassemblies"] + 1, (ql, qm)
+        # nothing silently dropped on the mesh path
+        assert all(v == 0 for v in out_m["overflow"].values()), (
+            out_m["overflow"])
+        print("MESH E2E OK")
+        """,
+        # Local + Mesh end-to-end in one interpreter: dominated by XLA
+        # compiles of the per-round shard_map programs on host devices
+        timeout=2400,
     )
 
 

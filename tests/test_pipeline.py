@@ -3,7 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import pipeline
+from repro.api import Assembler, AssemblyPlan, Local
 from repro.core.kmer_analysis import ExtensionPolicy
 from repro.data import mgsim
 from helpers import genome_coverage, matches_genome, seq_str
@@ -15,7 +15,7 @@ def scaffold_list(seqs, min_len=1):
     return [bases[i, : lengths[i]] for i in range(len(lengths)) if lengths[i] >= min_len]
 
 
-SMALL_CFG = pipeline.PipelineConfig(
+SMALL_PLAN = AssemblyPlan(
     k_min=17, k_max=21, k_step=4,
     kmer_capacity=1 << 14, contig_cap=256, max_contig_len=2048,
     walk_capacity=1 << 15, link_capacity=1 << 10, max_scaffold_len=1 << 12,
@@ -23,9 +23,13 @@ SMALL_CFG = pipeline.PipelineConfig(
 )
 
 
+def assemble(reads, plan):
+    return Assembler(plan, Local()).assemble(reads)
+
+
 def test_assemble_single_genome_end_to_end():
     genome, reads, _ = mgsim.single_genome_reads(31, genome_len=700, coverage=25)
-    out = pipeline.assemble(reads, SMALL_CFG)
+    out = assemble(reads, SMALL_PLAN)
     scaffolds = scaffold_list(out["scaffold_seqs"], min_len=100)
     assert scaffolds, "no scaffolds produced"
     longest = max(scaffolds, key=len)
@@ -38,7 +42,7 @@ def test_assemble_community_quality():
                                   abundance_sigma=0.3)
     reads, _ = mgsim.generate_reads(33, comm, num_pairs=600, read_len=60,
                                     err_rate=0.003)
-    out = pipeline.assemble(reads, SMALL_CFG)
+    out = assemble(reads, SMALL_PLAN)
     scaffolds = scaffold_list(out["scaffold_seqs"], min_len=60)
     assert scaffolds
     # each genome should be mostly covered by contigs (genome fraction)
@@ -65,12 +69,10 @@ def test_iterative_beats_single_k_on_mixed_coverage():
     comm.abundances[:] = [0.9, 0.1]
     reads, _ = mgsim.generate_reads(35, comm, num_pairs=500, read_len=60,
                                     err_rate=0.003)
-    iter_cfg = SMALL_CFG
-    single_cfg = pipeline.PipelineConfig(**{
-        **dataclasses_asdict(SMALL_CFG), "k_min": 21, "k_max": 21
-    })
-    out_iter = pipeline.assemble(reads, iter_cfg)
-    out_single = pipeline.assemble(reads, single_cfg)
+    import dataclasses
+    single_plan = dataclasses.replace(SMALL_PLAN, k_min=21, k_max=21)
+    out_iter = assemble(reads, SMALL_PLAN)
+    out_single = assemble(reads, single_plan)
 
     def low_cov_fraction(out):
         alive = np.asarray(out["alive"])
@@ -87,11 +89,6 @@ def test_iterative_beats_single_k_on_mixed_coverage():
     assert f_iter >= f_single - 0.02, (
         f"iterative ({f_iter:.2f}) should not lose to single-k ({f_single:.2f})"
     )
-
-
-def dataclasses_asdict(cfg):
-    import dataclasses
-    return {f.name: getattr(cfg, f.name) for f in dataclasses.fields(cfg)}
 
 
 def test_scaffolding_joins_contigs_across_coverage_gap():
@@ -124,7 +121,7 @@ def test_scaffolding_joins_contigs_across_coverage_gap():
             keep[int(reads.mate[r])] = keep[int(reads.mate[r])]  # keep mate
     bases[~keep] = 4  # mask those reads entirely
     reads2 = reads._replace(bases=jnp.asarray(bases))
-    out = pipeline.assemble(reads2, SMALL_CFG)
+    out = assemble(reads2, SMALL_PLAN)
     scaffs = out["scaffolds"]
     n_members = np.asarray(scaffs.n_members)
     # at least one scaffold should chain >= 2 contigs across the dead zone
