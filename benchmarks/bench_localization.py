@@ -83,6 +83,11 @@ def main():
     print("\nname,us_per_call,derived")
     print(f"localization,{r['localization_time_s'] * 1e6:.0f},"
           f"before={r['locality_before']:.3f};after={r['locality_after']:.3f}")
+    from . import record
+
+    record.emit("localization", [r], derived={
+        "locality_gain": r["locality_after"] - r["locality_before"],
+    })
     assert r["locality_after"] > r["locality_before"]
     return r
 

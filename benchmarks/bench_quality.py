@@ -109,6 +109,13 @@ def main():
         print(f"quality_{r['mode']},{r['runtime_s'] * 1e6:.0f},"
               f"n50={r['n50']};gf={r['genome_fraction']:.3f};"
               f"mis={r['misassemblies']};rrna={r['rrna_hits']}")
+    from . import record
+
+    record.emit("quality", rows, derived={
+        "metahipmer_genome_fraction": by["metahipmer"]["genome_fraction"],
+        "metahipmer_n50": by["metahipmer"]["n50"],
+        "metahipmer_misassemblies": by["metahipmer"]["misassemblies"],
+    })
     assert by["metahipmer"]["genome_fraction"] >= by["hipmer"][
         "genome_fraction"] - 0.02
     return rows

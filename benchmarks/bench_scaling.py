@@ -127,8 +127,14 @@ def main():
               f"balance={r['owned_min'] / max(r['owned_max'], 1):.2f}")
     for k, v in stages.items():
         print(f"stage_{k},{v * 1e6:.0f},")
-    # load balance across owners should be tight (hash ownership)
+    from . import record
+
     last = rows[-1]
+    record.emit("scaling", rows, derived={
+        "stages": stages,
+        "balance_S8": last["owned_min"] / max(last["owned_max"], 1),
+    })
+    # load balance across owners should be tight (hash ownership)
     assert last["owned_min"] / max(last["owned_max"], 1) > 0.7
     return rows, stages
 

@@ -69,9 +69,13 @@ def main():
             f"kbases_per_s_per_shard={r['kbases_per_s_per_shard']:.2f};"
             f"owned_per_shard={r['owned_per_shard']:.0f}"
         )
-    # weak-scaling invariant: per-shard owned state stays ~flat
+    from . import record
+
     o1 = rows[0]["owned_per_shard"]
     o8 = rows[-1]["owned_per_shard"]
+    record.emit("weak_scaling", rows,
+                derived={"owned_growth_S8_over_S1": o8 / max(o1, 1)})
+    # weak-scaling invariant: per-shard owned state stays ~flat
     assert o8 < 2.5 * o1, (o1, o8)
     return rows
 

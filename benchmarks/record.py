@@ -1,0 +1,63 @@
+"""Machine-readable benchmark records: one BENCH_<name>.json per bench.
+
+Every benchmark's `main()` emits its measurements here so the perf
+trajectory is a set of diffable JSON files instead of stdout prose.
+`benchmarks/run.py` collects whatever records the run produced and prints
+a combined summary.
+
+Record schema (one file per bench):
+
+    {
+      "name": "quality",
+      "schema": 1,
+      "rows": [{...}, ...],      # the bench's own measurement dicts
+      "derived": {...},          # optional headline scalars
+    }
+
+The output directory defaults to `experiments/bench/` and can be moved
+with the BENCH_OUT environment variable (CI points it at a workspace
+artifact dir).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Optional
+
+
+def out_dir() -> str:
+    return os.environ.get("BENCH_OUT", os.path.join("experiments", "bench"))
+
+
+def emit(name: str, rows, derived: Optional[dict] = None) -> str:
+    """Write BENCH_<name>.json; returns the path."""
+    d = out_dir()
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"BENCH_{name}.json")
+    payload = {
+        "name": name,
+        "schema": 1,
+        "written_at": time.time(),
+        "rows": rows,
+        "derived": derived or {},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=float)
+        f.write("\n")
+    return path
+
+
+def collect(directory: Optional[str] = None) -> dict:
+    """Load every BENCH_*.json under `directory` -> {name: payload}."""
+    d = directory or out_dir()
+    out = {}
+    for path in sorted(glob.glob(os.path.join(d, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        out[payload.get("name", os.path.basename(path))] = payload
+    return out

@@ -2,12 +2,18 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only quality,localization,...]
 
-Emits `name,us_per_call,derived` CSV lines per bench plus a roofline
-summary table if dry-run records exist (experiments/dryrun/*.json).
+Each bench emits a machine-readable BENCH_<name>.json record
+(benchmarks/record.py; directory from $BENCH_OUT, default
+experiments/bench/) which this orchestrator collects into a combined
+summary, plus the historical `name,us_per_call,derived` CSV lines and a
+roofline summary table if dry-run records exist
+(experiments/dryrun/*.json).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -19,6 +25,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
+    run_started = time.time()
     benches = {}
     from . import bench_quality, bench_localization, bench_scaling, \
         bench_weak_scaling
@@ -40,6 +47,33 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    # collect the machine-readable records; records from EARLIER runs are
+    # kept (the perf trajectory spans runs) but flagged stale so the
+    # combined summary never passes old numbers off as this run's
+    from . import record
+
+    records = record.collect()
+    if records:
+        print(f"\n===== bench records ({record.out_dir()}) =====")
+        for name, payload in records.items():
+            payload["stale"] = payload.get("written_at", 0) < run_started
+            # a bench emits its record before its acceptance assert, so a
+            # fresh record can still belong to a FAILED bench — flag it
+            payload["bench_failed"] = name in failed
+            derived = payload.get("derived") or {}
+            headline = ", ".join(
+                f"{k}={v}" for k, v in sorted(derived.items())
+                if not isinstance(v, (dict, list))
+            )
+            marker = (" [stale: earlier run]" if payload["stale"] else
+                      " [bench FAILED]" if payload["bench_failed"] else "")
+            print(f"BENCH_{name}.json: {len(payload.get('rows', []))} rows"
+                  + (f" ({headline})" if headline else "") + marker)
+        combined = os.path.join(record.out_dir(), "bench_summary.json")
+        with open(combined, "w") as f:
+            json.dump(records, f, indent=2, sort_keys=True, default=float)
+            f.write("\n")
+        print(f"combined summary -> {combined}")
     # roofline summary (if the dry-run has produced records)
     try:
         from repro.launch import roofline

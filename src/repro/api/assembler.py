@@ -172,3 +172,26 @@ class Assembler:
             "plan": plan,
             "overflow": ctx.overflow(),
         }
+
+    # ---- out-of-core execution (DESIGN.md §7) ----
+
+    def assemble_stream(self, batches, hmm_hit=None, *,
+                        checkpoint_dir: Optional[str] = None) -> dict:
+        """Full pipeline over a re-iterable source of fixed-shape batches.
+
+        The out-of-core twin of `assemble`: same algorithms, same result
+        dict (plus per-k "stream_stats"), but the read set is never
+        resident — k-mer analysis streams twice through the Bloom
+        two-sighting rule with a running owner-partitioned fold, and the
+        read-proportional stages consume one batch at a time
+        (repro.stream.driver).  Size the plan with
+        `AssemblyPlan.from_stream`, whose memory bill is independent of
+        total read count.  `checkpoint_dir` enables batch-boundary
+        checkpoint/resume of the streaming analysis state.
+        """
+        from repro.stream import driver
+
+        return driver.assemble_stream(
+            self.plan, self.ctx, batches, hmm_hit=hmm_hit,
+            checkpoint_dir=checkpoint_dir,
+        )

@@ -58,6 +58,32 @@ class ExecutionContext:
         """Per-read splint/span link witnesses (flat candidate arrays)."""
         raise NotImplementedError
 
+    # ---- streaming protocol (DESIGN.md §7) ----
+
+    def prepare_stream(self, plan, *, checkpoint_dir=None) -> None:
+        """Bind a plan for out-of-core execution (no resident read set)."""
+        raise NotImplementedError
+
+    def stream_kmer_set(self, k: int, batches, prev):
+        """Two-pass streamed k-mer set over a re-iterable batch source.
+
+        Same contract as `kmer_set` plus the per-stream accounting:
+        returns (KmerSet, overflow_dict, StreamStats).
+        """
+        raise NotImplementedError
+
+    def align_batch(self, batch, contigs, sidx, seed_len: int):
+        """Alignments of one batch against the (replicated) seed index."""
+        raise NotImplementedError
+
+    def _kmer_ckpt_dir(self, k: int):
+        base = getattr(self, "_stream_ckpt", None)
+        if base is None:
+            return None
+        import os
+
+        return os.path.join(base, f"k{k}")
+
     def overflow(self) -> dict:
         """Accumulated overflow counts (reported, never dropped: §3.4)."""
         return dict(self._overflow)
@@ -136,6 +162,46 @@ class Local(ExecutionContext):
         clens = jnp.where(alive, contigs.lengths, 0)
         return scaffolding.candidate_links(al, self.reads, clens)
 
+    # ---- streaming (DESIGN.md §7) ----
+
+    def prepare_stream(self, plan, *, checkpoint_dir=None) -> None:
+        self.plan = plan
+        self._stream_ckpt = checkpoint_dir
+        self._reset_overflow()
+
+    def stream_kmer_set(self, k: int, batches, prev):
+        from repro.stream import analysis as stream_analysis
+
+        plan = self.plan
+        run, sstats = stream_analysis.streaming_kmer_analysis(
+            batches, k=k, capacity=plan.kmer_capacity,
+            bloom_bits=plan.bloom_slots,
+            checkpoint_dir=self._kmer_ckpt_dir(k),
+        )
+        if prev is not None:
+            from .assembler import extract_contig_kmers
+
+            contigs, alive = prev
+            ptab = extract_contig_kmers(
+                contigs, alive, k=k, capacity=plan.kmer_capacity,
+                weight=plan.contig_pseudo_weight,
+            )
+            run = kmer_analysis.merge_counts(
+                run, ptab, capacity=plan.kmer_capacity
+            )
+            sstats.table_overflow += int(run["overflow"])
+        self._note_overflow("kmer_table", sstats.table_overflow)
+        kset = kmer_analysis.finalize(
+            run, min_count=self.plan.min_count, policy=self.plan.policy
+        )
+        return kset, {"table": bool(sstats.table_overflow)}, sstats
+
+    def align_batch(self, batch, contigs, sidx, seed_len: int):
+        return alignment.align_reads(
+            batch, contigs, sidx, seed_len=seed_len,
+            stride=self.plan.seed_stride,
+        )
+
 
 class Mesh(ExecutionContext):
     """Distributed execution over a 1-D "data" mesh (DESIGN.md §3, §6).
@@ -162,26 +228,32 @@ class Mesh(ExecutionContext):
             self._mesh = dist.data_mesh(self.num_shards)
         return self._mesh
 
-    def prepare(self, reads, plan) -> None:
-        import dataclasses
+    def _adapt_plan(self, plan, constructor: str):
+        """Validate/re-derive a plan for this mesh width (shared by the
+        in-memory and streaming prepare paths).
 
-        from repro.dist import pipeline as dist
+        A default (single-shard) plan adapts: the global capacities carry
+        over, the per-shard ones (pre_cap, route_cap, ...) re-derive for
+        this mesh width so exchange buffers and plan.bytes() are priced
+        for S shards, not 1."""
+        import dataclasses
 
         if plan.num_shards not in (1, self.num_shards):
             raise ValueError(
                 f"plan was sized for {plan.num_shards} shards but the mesh "
                 f"has {self.num_shards}; re-plan with "
-                f"AssemblyPlan.from_dataset(..., num_shards="
+                f"AssemblyPlan.{constructor}(..., num_shards="
                 f"{self.num_shards})"
             )
         if plan.num_shards != self.num_shards:
-            # a default (single-shard) plan adapts here: the global
-            # capacities carry over, the per-shard ones (pre_cap,
-            # route_cap, ...) re-derive for this mesh width so exchange
-            # buffers and plan.bytes() are priced for S shards, not 1
             plan = dataclasses.replace(plan, num_shards=self.num_shards)
+        return plan
+
+    def prepare(self, reads, plan) -> None:
+        from repro.dist import pipeline as dist
+
         self.reads = reads          # original layout: scaffolding mates
-        self.plan = plan
+        self.plan = self._adapt_plan(plan, "from_dataset")
         self.sharded = dist.shard_reads(reads, self.num_shards)
         self._reset_overflow()
 
@@ -261,3 +333,67 @@ class Mesh(ExecutionContext):
         )
         self._note_overflow("localize_pairs", ovf)
         return cands
+
+    # ---- streaming (DESIGN.md §7) ----
+
+    def prepare_stream(self, plan, *, checkpoint_dir=None) -> None:
+        self.plan = self._adapt_plan(plan, "from_stream")
+        self._stream_ckpt = checkpoint_dir
+        self._reset_overflow()
+
+    def stream_kmer_set(self, k: int, batches, prev):
+        from repro.stream import analysis as stream_analysis
+
+        plan = self.plan
+        run, sstats = stream_analysis.sharded_streaming_kmer_analysis(
+            batches, self.mesh, k=k,
+            capacity=plan.shard_table_cap,
+            bloom_bits=plan.bloom_slots,
+            pre_capacity=plan.pre_cap,
+            route_capacity=plan.route_capacity,
+            checkpoint_dir=self._kmer_ckpt_dir(k),
+        )
+        # ownership is total, so the per-owner slices merge into one
+        # key-sorted global table by pure re-sort (cf. gather_ksets) —
+        # BEFORE any finalize, so §II-H contig evidence merges into raw
+        # counts exactly like the Local streaming path
+        merged = kmer_analysis.aggregate_weighted(
+            run["hi"], run["lo"], run["count"],
+            run["left_cnt"], run["right_cnt"], run["count"] > 0,
+            capacity=plan.kmer_capacity,
+        )
+        sstats.table_overflow += int(merged["overflow"])
+        if prev is not None:
+            from .assembler import extract_contig_kmers
+
+            contigs, alive = prev
+            ptab = extract_contig_kmers(
+                contigs, alive, k=k, capacity=plan.kmer_capacity,
+                weight=plan.contig_pseudo_weight,
+            )
+            merged = kmer_analysis.merge_counts(
+                merged, ptab, capacity=plan.kmer_capacity
+            )
+            sstats.table_overflow += int(merged["overflow"])
+        self._note_overflow("kmer_table", sstats.table_overflow)
+        self._note_overflow("kmer_route", sstats.route_overflow)
+        kset = kmer_analysis.finalize(
+            merged, min_count=plan.min_count, policy=plan.policy
+        )
+        return kset, {
+            "table": bool(sstats.table_overflow),
+            "route": int(sstats.route_overflow),
+        }, sstats
+
+    def align_batch(self, batch, contigs, sidx, seed_len: int):
+        import jax
+
+        from repro.dist import pipeline as dist, stages
+
+        sharded = dist.shard_reads(batch, self.num_shards)
+        al = stages.sharded_align(
+            sharded, contigs, sidx, self.mesh,
+            seed_len=seed_len, stride=self.plan.seed_stride,
+        )
+        B = batch.num_reads
+        return jax.tree.map(lambda x: x[:B], al)

@@ -42,6 +42,26 @@ def _ladder(k: int, step: int) -> tuple:
     return (max(11, k - step), k, min(k + step, 27))
 
 
+def _normalize_k_range(k_range: tuple) -> tuple:
+    """(k_min, k_max) -> (k_min, k_max, step); 3-tuples pass through."""
+    if len(k_range) == 2:
+        return (k_range[0], k_range[1], max(k_range[1] - k_range[0], 1))
+    return tuple(k_range)
+
+
+def _clamp_contig_cap(base: dict, overrides: dict) -> dict:
+    """Respect the (contig, mer) tag-space limit of the walk ladder unless
+    the caller pinned contig_cap explicitly.  Shared by every plan
+    constructor so the clamp rule cannot drift between them."""
+    if "contig_cap" not in overrides:
+        step = base.get("walk_ladder_step", 4)
+        hi_mer = min(base["k_max"] + step, 27)
+        base["contig_cap"] = min(
+            base["contig_cap"], 1 << min(16, 62 - 2 * hi_mer)
+        )
+    return base
+
+
 def validate_assembly_params(
     *,
     k_min: int,
@@ -166,8 +186,16 @@ class AssemblyPlan:
     shard_table_capacity: Optional[int] = None  # per-shard owner-table rows
     route_capacity: Optional[int] = None        # per-(sender, dest) rows
     localize_out_factor: int = 2
+    # --- streaming execution (DESIGN.md §7) ---
+    # batch_reads: rows per streamed batch (None = in-memory plan);
+    # bloom_bits: per-shard Bloom filter slots for the two-pass admission
+    # (None = derive from kmer_capacity).  Both set by `from_stream`.
+    batch_reads: Optional[int] = None
+    bloom_bits: Optional[int] = None
     # dataset shape (num_reads, max_len) — recorded by `from_dataset` /
-    # `bind` so `bytes()` can price the read-proportional buffers
+    # `bind` so `bytes()` can price the read-proportional buffers; for a
+    # streaming plan this is (batch_reads, max_len): the device never
+    # holds more than one batch of read state
     dataset_shape: Optional[tuple] = None
 
     def __post_init__(self):
@@ -201,6 +229,20 @@ class AssemblyPlan:
             )
         if self.slack <= 0:
             raise PlanError(f"AssemblyPlan: slack={self.slack} must be > 0")
+        if self.batch_reads is not None and (
+            self.batch_reads < 2 or self.batch_reads % 2
+        ):
+            raise PlanError(
+                f"AssemblyPlan: batch_reads={self.batch_reads} must be even "
+                f"and >= 2 — batches hold whole read pairs"
+            )
+        if self.bloom_bits is not None and (
+            self.bloom_bits <= 0 or self.bloom_bits & (self.bloom_bits - 1)
+        ):
+            raise PlanError(
+                f"AssemblyPlan: bloom_bits={self.bloom_bits} must be a "
+                f"positive power of two (Bloom positions mask the hash)"
+            )
 
     # ---- schedule helpers (shared with the PipelineConfig shim) ----
 
@@ -239,6 +281,21 @@ class AssemblyPlan:
             self.pre_cap, self.num_shards, slack=self.slack
         )
 
+    @property
+    def bloom_slots(self) -> int:
+        """Per-shard Bloom filter slots for the streamed two-pass admission.
+
+        Defaults to 16x the per-shard share of the k-mer table: the filter
+        must sketch the RAW distinct population (true k-mers + error
+        singletons, typically ~10x the admitted population) at a low
+        false-positive rate, and one slot costs 1/48th of a table row.
+        """
+        if self.bloom_bits is not None:
+            return self.bloom_bits
+        return cap_lib.next_pow2(
+            max(1 << 14, 16 * self.kmer_capacity // self.num_shards)
+        )
+
     # ---- construction ----
 
     @classmethod
@@ -264,9 +321,7 @@ class AssemblyPlan:
             for clean data; →1 for error-heavy data).
           overrides: any AssemblyPlan field, overriding the derivation.
         """
-        if len(k_range) == 2:
-            k_range = (k_range[0], k_range[1], max(k_range[1] - k_range[0], 1))
-        k_min, k_max, k_step = k_range
+        k_min, k_max, k_step = _normalize_k_range(k_range)
         R = int(reads.num_reads)
         L = int(reads.max_len)
         p2 = cap_lib.next_pow2
@@ -300,14 +355,80 @@ class AssemblyPlan:
             dataset_shape=(R, L),
         )
         base.update(overrides)
-        if "contig_cap" not in overrides:
-            # respect the (contig, mer) tag-space limit of the walk ladder
-            step = base.get("walk_ladder_step", 4)
-            hi_mer = min(base["k_max"] + step, 27)
-            base["contig_cap"] = min(
-                base["contig_cap"], 1 << min(16, 62 - 2 * hi_mer)
-            )
-        return cls(**base)
+        return cls(**_clamp_contig_cap(base, overrides))
+
+    @classmethod
+    def from_stream(
+        cls,
+        batch_reads: int,
+        max_len: int,
+        k_range: tuple = (17, 21, 4),
+        *,
+        unique_kmers: Optional[int] = None,
+        bloom_bits: Optional[int] = None,
+        num_shards: int = 1,
+        slack: float = 2.0,
+        unique_rate: float = 0.1,
+        total_reads: Optional[int] = None,
+        **overrides,
+    ) -> "AssemblyPlan":
+        """Size a streaming plan from BATCH shape, not dataset size (§7).
+
+        The defining property of the streamed path: `plan.bytes()` is a
+        function of `batch_reads`, `max_len`, and the capacity estimates —
+        `total_reads` is accepted for interface symmetry and deliberately
+        ignored by every derivation, so the memory bill provably does not
+        grow with dataset size (asserted in tests/test_stream.py).  What
+        DOES bound the tables is the true (>= 2-sighting) k-mer
+        population:
+
+        Args:
+          batch_reads: rows per streamed batch (even; whole pairs).
+          max_len: batch column width (max read length).
+          unique_kmers: estimate of the DISTINCT true k-mer population —
+            community genome content, the paper's §II-B cardinality
+            estimate.  Defaults to `unique_rate` x one batch's occurrence
+            count, which assumes a single batch covers the community; pass
+            it explicitly when it does not.
+          bloom_bits: per-shard Bloom filter slots budget (the dial that
+            trades filter memory against false-positive singleton
+            admissions); default derives from the k-mer table size.
+          total_reads: ignored for sizing (see above).
+        """
+        del total_reads  # sizing must not depend on dataset size
+        k_min, k_max, k_step = _normalize_k_range(k_range)
+        B = int(batch_reads)
+        L = int(max_len)
+        p2 = cap_lib.next_pow2
+        windows = max(L - k_min + 1, 1)
+        occ_batch = B * windows
+        unique = max(int(unique_kmers or unique_rate * occ_batch), 1)
+        kmer_capacity = max(1 << 10, p2(int(slack * unique)))
+        contig_cap = max(256, p2(int(slack * unique // (2 * k_min))))
+        max_contig_len = int(min(max(1 << 11, p2(unique // 4)), 1 << 15))
+        # (contig, mer) pairs are occurrence-collapsed and bounded by
+        # assembled bases x rungs — a function of `unique`, NOT of reads
+        walk_capacity = max(1 << 12, p2(int(slack * 2 * unique)))
+        # the link STORE is contig-pair scale (witnesses stream per batch)
+        link_capacity = int(min(max(1 << 10, p2(int(slack * 16 * contig_cap))),
+                                1 << 16))
+        max_scaffold_len = int(min(4 * max_contig_len, 1 << 16))
+        base = dict(
+            k_min=k_min, k_max=k_max, k_step=k_step,
+            kmer_capacity=kmer_capacity,
+            contig_cap=contig_cap,
+            max_contig_len=max_contig_len,
+            walk_capacity=walk_capacity,
+            link_capacity=link_capacity,
+            max_scaffold_len=max_scaffold_len,
+            num_shards=num_shards,
+            slack=slack,
+            batch_reads=B,
+            bloom_bits=bloom_bits,
+            dataset_shape=(B, L),
+        )
+        base.update(overrides)
+        return cls(**_clamp_contig_cap(base, overrides))
 
     # ---- memory estimate ----
 
@@ -347,6 +468,9 @@ class AssemblyPlan:
                 self.num_shards * self.route_cap * 56
                 + self.localize_out_factor * per_shard_R * (L + 8)
             )
+        if self.batch_reads is not None:
+            # two persistent Bloom filters (XLA bool = 1 byte/slot)
+            out["bloom_filters"] = 2 * self.bloom_slots
         return out
 
     def bind(self, reads) -> "AssemblyPlan":

@@ -115,15 +115,37 @@ def close_and_render(
     max_n_run: int = 64,
 ) -> ScaffoldSeqs:
     """Close gaps where possible, then render scaffold sequences."""
-    S, M = scaffs.contig.shape
-    C = contigs.capacity
-    Lc = contigs.max_len
     tag_bits = min(16, 62 - 2 * max(mer_sizes))
     read_contig = local_assembly.localize_reads(reads, aln_contig)
     wt = local_assembly.build_walk_tables(
         reads, read_contig, mer_sizes=mer_sizes, tag_bits=tag_bits,
         capacity=walk_capacity,
     )
+    return close_and_render_with_tables(
+        scaffs, contigs, wt, seed_len=seed_len, mer_sizes=mer_sizes,
+        max_walk=max_walk, max_scaffold_len=max_scaffold_len,
+        max_n_run=max_n_run,
+    )
+
+
+def close_and_render_with_tables(
+    scaffs: Scaffolds,
+    contigs: ContigSet,
+    wt: local_assembly.WalkTables,
+    *,
+    seed_len: int = 17,
+    mer_sizes: tuple = (17, 21, 25),
+    max_walk: int = 64,
+    max_scaffold_len: int = 1 << 13,
+    max_n_run: int = 64,
+) -> ScaffoldSeqs:
+    """Gap closure from prebuilt walk tables (streaming ingest accumulates
+    them batch by batch, DESIGN.md §7; the in-memory wrapper above builds
+    them from the whole read set in one shot)."""
+    S, M = scaffs.contig.shape
+    C = contigs.capacity
+    Lc = contigs.max_len
+    tag_bits = min(16, 62 - 2 * max(mer_sizes))
     # per (scaffold, j) gap: left member j, right member j+1
     left_c = scaffs.contig
     left_o = scaffs.orient

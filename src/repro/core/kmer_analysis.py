@@ -198,7 +198,7 @@ def compute_extensions(count, left_cnt, right_cnt, policy: ExtensionPolicy):
     return side(left_cnt), side(right_cnt)
 
 
-def _dup_in_chunk(hi, lo, valid):
+def dup_in_chunk(hi, lo, valid):
     """Flag the 2nd+ occurrence of each key within the chunk (exact, sorted)."""
     shi = jnp.where(valid, hi, EMPTY_HI)
     slo = jnp.where(valid, lo, jnp.uint32(0xFFFFFFFF))
@@ -211,6 +211,53 @@ def _dup_in_chunk(hi, lo, valid):
         ]
     )
     return jnp.zeros(hi.shape, bool).at[o_idx].set(dup_sorted)
+
+
+_dup_in_chunk = dup_in_chunk  # historical private name
+
+
+def bloom_observe(f1: "bloom.BloomFilter", f2: "bloom.BloomFilter",
+                  hi, lo, valid):
+    """One pass-1 step of the two-sighting rule over one occurrence batch.
+
+    Keys already in f1 (sighted in an EARLIER batch) or duplicated within
+    this batch (exact, via sort) are marked "seen twice" in f2; every key
+    then enters f1.  Querying f1 against the state *prior* to this batch
+    preserves the no-false-negative guarantee.  This is the persistent-
+    state building block shared by the in-memory chunked admission below
+    and the out-of-core streaming ingest (repro.stream, DESIGN.md §7).
+    """
+    seen = bloom.query(f1, hi, lo) | dup_in_chunk(hi, lo, valid)
+    f2 = bloom.insert(f2, hi, lo, valid & seen)
+    f1 = bloom.insert(f1, hi, lo, valid)
+    return f1, f2
+
+
+def bloom_admit(f2: "bloom.BloomFilter", hi, lo, valid):
+    """Pass-2 admission: keep occurrences whose key was sighted >= twice.
+
+    No false negatives; Bloom false positives let a few singletons
+    through, which the exact min_count filter downstream removes.
+    """
+    return valid & bloom.query(f2, hi, lo)
+
+
+def empty_count_table(capacity: int) -> dict:
+    """An empty count table, the identity element of `merge_counts`.
+
+    Seeds the running owner-partitioned fold of the streaming ingest:
+    `run = merge_counts(run, batch_table)` folds per-batch partials into a
+    persistent table of fixed `capacity` (DESIGN.md §7).
+    """
+    return {
+        "hi": jnp.full((capacity,), EMPTY_HI, jnp.uint32),
+        "lo": jnp.zeros((capacity,), jnp.uint32),
+        "count": jnp.zeros((capacity,), jnp.int32),
+        "left_cnt": jnp.zeros((capacity, 4), jnp.int32),
+        "right_cnt": jnp.zeros((capacity, 4), jnp.int32),
+        "n_unique": jnp.int32(0),
+        "overflow": jnp.asarray(False),
+    }
 
 
 def admit_two_sightings(hi, lo, valid, *, bloom_bits: int, num_chunks: int = 4):
@@ -231,11 +278,8 @@ def admit_two_sightings(hi, lo, valid, *, bloom_bits: int, num_chunks: int = 4):
         sl = slice(c * chunk, min((c + 1) * chunk, n))
         if sl.start >= n:
             break
-        chi, clo, cv = hi[sl], lo[sl], valid[sl]
-        seen = bloom.query(f1, chi, clo) | _dup_in_chunk(chi, clo, cv)
-        f2 = bloom.insert(f2, chi, clo, cv & seen)
-        f1 = bloom.insert(f1, chi, clo, cv)
-    return valid & bloom.query(f2, hi, lo)
+        f1, f2 = bloom_observe(f1, f2, hi[sl], lo[sl], valid[sl])
+    return bloom_admit(f2, hi, lo, valid)
 
 
 def analyze(

@@ -58,22 +58,74 @@ def localize_reads(reads: ReadSet, aln_contig):
 
 
 def _count_tagged(hi, lo, left, right, valid, tag, *, m: int, tag_bits: int,
-                  capacity: int):
-    """Canonicalize, tag, and histogram (contig,mer) occurrences into a DHT."""
+                  table: dht.HashTable, lh, rh):
+    """Canonicalize, tag, and histogram (contig,mer) occurrences into a DHT.
+
+    Inserts into the given table and accumulates onto the given histograms,
+    so repeated calls fold successive occurrence batches into one persistent
+    table (the streaming ingest path, DESIGN.md §7).  `dht.insert` dedupes
+    against existing entries, and histogram updates are scatter-adds at the
+    returned slots, so the result is batch-split independent.
+    """
     chi, clo, cleft, cright, _ = kmer.canonicalize_occurrences(
         hi, lo, left, right, k=m
     )
     thi, tlo = kmer.embed_tag(chi, clo, tag, k=m, tag_bits=tag_bits)
-    table, slots = dht.build(thi, tlo, valid, capacity=capacity)
+    table, slots = dht.insert(table, thi, tlo, valid)
     cap = table.capacity
-    sel = jnp.where(valid & (slots >= 0), slots, cap)
-    lh = jnp.zeros((cap, 4), jnp.int32)
-    rh = jnp.zeros((cap, 4), jnp.int32)
     lsel = jnp.where(valid & (slots >= 0) & (cleft < 4), slots, cap)
     rsel = jnp.where(valid & (slots >= 0) & (cright < 4), slots, cap)
     lh = lh.at[lsel, cleft.astype(jnp.int32) & 3].add(1, mode="drop")
     rh = rh.at[rsel, cright.astype(jnp.int32) & 3].add(1, mode="drop")
     return table, lh, rh
+
+
+def empty_walk_tables(*, mer_sizes: tuple, capacity: int) -> WalkTables:
+    """Empty per-rung tables, the identity of `accumulate_walk_tables`."""
+    n = len(mer_sizes)
+    return WalkTables(
+        tables=tuple(dht.empty_table(capacity) for _ in range(n)),
+        right_hist=tuple(jnp.zeros((capacity, 4), jnp.int32) for _ in range(n)),
+        left_hist=tuple(jnp.zeros((capacity, 4), jnp.int32) for _ in range(n)),
+    )
+
+
+def accumulate_walk_tables(
+    wt: WalkTables,
+    reads: ReadSet,
+    read_contig,
+    *,
+    mer_sizes: tuple,
+    tag_bits: int,
+) -> WalkTables:
+    """Fold one read batch's (contig, mer) occurrences into `wt`.
+
+    The out-of-core half of `build_walk_tables`: batches stream through
+    here one at a time, so the device never holds more than one batch of
+    read state while the (fixed-capacity) tables accumulate the evidence
+    of the whole dataset.
+    """
+    tables, lhs, rhs = [], [], []
+    for rung, m in enumerate(mer_sizes):
+        hi, lo, valid, left, right = kmer.extract_kmers(
+            reads.bases, reads.lengths, k=m
+        )
+        W = hi.shape[1]
+        tag = jnp.broadcast_to(read_contig[:, None], (reads.num_reads, W))
+        v = valid & (read_contig[:, None] >= 0)
+        flat = lambda x: x.reshape((-1,))
+        t, lh, rh = _count_tagged(
+            flat(hi), flat(lo), flat(left), flat(right), flat(v),
+            flat(tag), m=m, tag_bits=tag_bits,
+            table=wt.tables[rung], lh=wt.left_hist[rung],
+            rh=wt.right_hist[rung],
+        )
+        tables.append(t)
+        lhs.append(lh)
+        rhs.append(rh)
+    return WalkTables(
+        tables=tuple(tables), right_hist=tuple(rhs), left_hist=tuple(lhs)
+    )
 
 
 def build_walk_tables(
@@ -84,24 +136,9 @@ def build_walk_tables(
     tag_bits: int,
     capacity: int,
 ) -> WalkTables:
-    tables, lhs, rhs = [], [], []
-    for m in mer_sizes:
-        hi, lo, valid, left, right = kmer.extract_kmers(
-            reads.bases, reads.lengths, k=m
-        )
-        W = hi.shape[1]
-        tag = jnp.broadcast_to(read_contig[:, None], (reads.num_reads, W))
-        v = valid & (read_contig[:, None] >= 0)
-        flat = lambda x: x.reshape((-1,))
-        t, lh, rh = _count_tagged(
-            flat(hi), flat(lo), flat(left), flat(right), flat(v),
-            flat(tag), m=m, tag_bits=tag_bits, capacity=capacity,
-        )
-        tables.append(t)
-        lhs.append(lh)
-        rhs.append(rh)
-    return WalkTables(
-        tables=tuple(tables), right_hist=tuple(rhs), left_hist=tuple(lhs)
+    return accumulate_walk_tables(
+        empty_walk_tables(mer_sizes=mer_sizes, capacity=capacity),
+        reads, read_contig, mer_sizes=mer_sizes, tag_bits=tag_bits,
     )
 
 
@@ -297,6 +334,40 @@ def apply_extensions(contigs: ContigSet, alive, walk: WalkResult):
     return ContigSet(bases=out, lengths=new_len, depths=contigs.depths)
 
 
+def extend_with_tables(
+    wt: WalkTables,
+    contigs: ContigSet,
+    alive,
+    *,
+    mer_sizes: tuple,
+    max_ext: int = 64,
+    min_len: int | None = None,
+):
+    """Walk both ends from prebuilt tables and graft the extensions.
+
+    The contig-scale half of §II-G, shared by the in-memory path (tables
+    built in one shot) and the streaming path (tables accumulated batch by
+    batch, DESIGN.md §7).
+    """
+    C = contigs.capacity
+    tag_bits = min(16, 62 - 2 * max(mer_sizes))
+    assert C <= (1 << tag_bits), (
+        f"contig capacity {C} exceeds tag space {1 << tag_bits}"
+    )
+    bhi, blo, act = contig_end_buffers(contigs, alive)
+    min_len = min_len if min_len is not None else max(mer_sizes)
+    long_enough = contigs.lengths >= min_len
+    act = act & jnp.concatenate([long_enough, long_enough])
+    walker_contig = jnp.concatenate(
+        [jnp.arange(C, dtype=jnp.int32), jnp.arange(C, dtype=jnp.int32)]
+    )
+    walk = mer_walk(
+        wt, bhi, blo, walker_contig, act, mer_sizes=tuple(mer_sizes),
+        tag_bits=tag_bits, max_ext=max_ext,
+    )
+    return apply_extensions(contigs, alive, walk), walk
+
+
 def extend_contigs(
     reads: ReadSet,
     contigs: ContigSet,
@@ -319,15 +390,7 @@ def extend_contigs(
         reads, read_contig, mer_sizes=mer_sizes, tag_bits=tag_bits,
         capacity=capacity,
     )
-    bhi, blo, act = contig_end_buffers(contigs, alive)
-    min_len = min_len if min_len is not None else max(mer_sizes)
-    long_enough = contigs.lengths >= min_len
-    act = act & jnp.concatenate([long_enough, long_enough])
-    walker_contig = jnp.concatenate(
-        [jnp.arange(C, dtype=jnp.int32), jnp.arange(C, dtype=jnp.int32)]
+    return extend_with_tables(
+        wt, contigs, alive, mer_sizes=mer_sizes, max_ext=max_ext,
+        min_len=min_len,
     )
-    walk = mer_walk(
-        wt, bhi, blo, walker_contig, act, mer_sizes=tuple(mer_sizes),
-        tag_bits=tag_bits, max_ext=max_ext,
-    )
-    return apply_extensions(contigs, alive, walk), walk

@@ -141,6 +141,61 @@ def generate_reads(
     return reads, truth
 
 
+def generate_read_batches(
+    seed: int,
+    community: Community,
+    num_pairs: int,
+    *,
+    pairs_per_batch: int,
+    read_len: int = 60,
+    insert_mean: int = 180,
+    insert_sd: int = 10,
+    err_rate: float = 0.0,
+):
+    """Yield fixed-shape `[2 * pairs_per_batch, read_len]` ReadSet batches.
+
+    The weak-scaling data source for the out-of-core pipeline (DESIGN.md
+    §7): total dataset size is unbounded — batches generate on demand and
+    are dropped after use.  Each batch derives its own seed (`seed + b`),
+    so regeneration is deterministic per batch and the source is
+    re-iterable through `repro.stream.BatchSource`:
+
+        src = BatchSource(lambda: generate_read_batches(0, comm, 10**9,
+                                                        pairs_per_batch=4096))
+
+    The final short batch pads with inert rows (zero length, INVALID
+    bases, mate -1) to keep the shape fixed.
+    """
+    if pairs_per_batch < 1:
+        raise ValueError(f"pairs_per_batch={pairs_per_batch} must be >= 1")
+    B = 2 * pairs_per_batch
+    done = 0
+    batch_idx = 0
+    while done < num_pairs:
+        n = min(pairs_per_batch, num_pairs - done)
+        reads, _ = generate_reads(
+            seed + batch_idx, community, n, read_len=read_len,
+            insert_mean=insert_mean, insert_sd=insert_sd, err_rate=err_rate,
+        )
+        if 2 * n < B:
+            pad = B - 2 * n
+            reads = ReadSet(
+                bases=jnp.concatenate(
+                    [reads.bases, jnp.full((pad, read_len), 4, jnp.uint8)]
+                ),
+                lengths=jnp.concatenate(
+                    [reads.lengths, jnp.zeros((pad,), jnp.int32)]
+                ),
+                mate=jnp.concatenate(
+                    [reads.mate, jnp.full((pad,), -1, jnp.int32)]
+                ),
+                insert_size=reads.insert_size,
+            )
+        yield reads
+        done += n
+        batch_idx += 1
+
+
 def single_genome_reads(
     seed: int,
     genome_len: int = 1000,

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import alignment, exchange, kmer_analysis, local_assembly
+from repro.core import alignment, bloom, exchange, kmer_analysis, \
+    local_assembly
 from repro.core.kmer_analysis import ExtensionPolicy
 from repro.core.scaffolding import candidate_links
 from repro.core.types import ContigSet, INVALID_BASE, ReadSet
@@ -153,6 +154,174 @@ def sharded_kmer_analysis(
         check_rep=False,
     )
     return fn(reads.bases, reads.lengths, *contig_args)
+
+
+# ---------------------------------------------------------------------------
+# streaming ingest: sharded Bloom pass + running owner-partitioned fold
+# (paper §II-A/§II-B out-of-core; DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+def sharded_bloom_observe(
+    batch,
+    mesh,
+    f1_bits,
+    f2_bits,
+    *,
+    k: int,
+    pre_capacity: int,
+    route_capacity: Optional[int] = None,
+    num_hashes: int = 3,
+):
+    """Pass 1 of the streamed two-sighting rule for ONE batch.
+
+    The Bloom filters are owner-partitioned ([S, bloom_bits]; shard s
+    holds the bits of keys it owns): each shard pre-combines its block of
+    the batch, routes (key, count) entries to their hash owners, and the
+    owner — after an exact cross-sender aggregate — marks keys already in
+    its f1 shard (sighted in an EARLIER batch) or arriving with batch
+    count >= 2 in f2, then inserts everything into f1.  Ownership is
+    total, so the two-sighting decision is globally exact per key — no
+    false negatives, same as the single-device `bloom_observe`.
+
+    Returns (f1_bits, f2_bits, route_overflow, table_overflow).
+    """
+    S = mesh_shards(mesh)
+    from .pipeline import shard_reads
+
+    reads = shard_reads(batch, S)
+    if route_capacity is None:
+        route_capacity = cap_lib.default_route_capacity(pre_capacity, S)
+    recv_cap = S * route_capacity
+
+    def body(bases, lengths, f1b, f2b):
+        local = ReadSet(
+            bases=bases, lengths=lengths,
+            mate=jnp.full(lengths.shape, -1, jnp.int32), insert_size=0,
+        )
+        hi, lo, left, right, valid = kmer_analysis.occurrences(local, k=k)
+        pre = kmer_analysis.count_occurrences(
+            hi, lo, left, right, valid, capacity=pre_capacity
+        )
+        pvalid = pre["count"] > 0
+        dest = kmer_owner(pre["hi"], pre["lo"], S)
+        res = exchange.route(
+            dest, (pre["hi"], pre["lo"], pre["count"]), pvalid,
+            num_shards=S, capacity=route_capacity, axis_name=AXIS,
+        )
+        rhi, rlo, rcnt = res.payload
+        # exact cross-sender dedupe: a key split over senders arrives as
+        # several rows; summing them makes "count >= 2 within this batch"
+        # a per-key truth before it touches the (lossy) filter
+        zeros4 = jnp.zeros((rhi.shape[0], 4), jnp.int32)
+        agg = kmer_analysis.aggregate_weighted(
+            rhi, rlo, rcnt, zeros4, zeros4, res.valid, capacity=recv_cap
+        )
+        keys_ok = agg["count"] > 0
+        f1 = bloom.BloomFilter(bits=f1b[0], num_hashes=num_hashes)
+        f2 = bloom.BloomFilter(bits=f2b[0], num_hashes=num_hashes)
+        seen = bloom.query(f1, agg["hi"], agg["lo"]) | (agg["count"] >= 2)
+        f2 = bloom.insert(f2, agg["hi"], agg["lo"], keys_ok & seen)
+        f1 = bloom.insert(f1, agg["hi"], agg["lo"], keys_ok)
+        table_ovf = jax.lax.psum(pre["overflow"].astype(jnp.int32), AXIS)
+        return f1.bits[None], f2.bits[None], res.overflow, table_ovf
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS), P(), P()),
+        check_rep=False,
+    )
+    return fn(reads.bases, reads.lengths, f1_bits, f2_bits)
+
+
+def sharded_stream_fold(
+    batch,
+    mesh,
+    f2_bits,
+    run: dict,
+    *,
+    k: int,
+    capacity: int,
+    pre_capacity: int,
+    route_capacity: Optional[int] = None,
+    num_hashes: int = 3,
+):
+    """Pass 2 for ONE batch: admit at the owner, fold into the running table.
+
+    Each shard pre-combines its block (counts + extension histograms) and
+    routes entries to their hash owners; the owner admits only keys its f2
+    shard has seen twice and segment-reduces the admitted partials INTO its
+    slice of the persistent running table (`aggregate_weighted` over the
+    concatenation — the associative owner fold).  The running table is the
+    flat [S * capacity] owner layout of `sharded_kmer_analysis`, so after
+    the last batch it gathers/finalizes exactly like the in-memory path.
+
+    Returns (run', (occ_total, occ_admitted), route_overflow,
+    table_overflow).
+    """
+    S = mesh_shards(mesh)
+    from .pipeline import shard_reads
+
+    reads = shard_reads(batch, S)
+    if route_capacity is None:
+        route_capacity = cap_lib.default_route_capacity(pre_capacity, S)
+
+    def body(bases, lengths, f2b, run_hi, run_lo, run_cnt, run_l, run_r):
+        local = ReadSet(
+            bases=bases, lengths=lengths,
+            mate=jnp.full(lengths.shape, -1, jnp.int32), insert_size=0,
+        )
+        hi, lo, left, right, valid = kmer_analysis.occurrences(local, k=k)
+        pre = kmer_analysis.count_occurrences(
+            hi, lo, left, right, valid, capacity=pre_capacity
+        )
+        pvalid = pre["count"] > 0
+        dest = kmer_owner(pre["hi"], pre["lo"], S)
+        res = exchange.route(
+            dest,
+            (pre["hi"], pre["lo"], pre["count"], pre["left_cnt"],
+             pre["right_cnt"]),
+            pvalid, num_shards=S, capacity=route_capacity, axis_name=AXIS,
+        )
+        rhi, rlo, rcnt, rl, rr = res.payload
+        f2 = bloom.BloomFilter(bits=f2b[0], num_hashes=num_hashes)
+        admitted = res.valid & bloom.query(f2, rhi, rlo)
+        occ_total = jax.lax.psum(
+            jnp.where(pvalid, pre["count"], 0).sum(), AXIS
+        )
+        occ_admitted = jax.lax.psum(jnp.where(admitted, rcnt, 0).sum(), AXIS)
+        new = kmer_analysis.aggregate_weighted(
+            jnp.concatenate([run_hi, rhi]),
+            jnp.concatenate([run_lo, rlo]),
+            jnp.concatenate([run_cnt, rcnt]),
+            jnp.concatenate([run_l, rl]),
+            jnp.concatenate([run_r, rr]),
+            jnp.concatenate([run_cnt > 0, admitted]),
+            capacity=capacity,
+        )
+        table_ovf = jax.lax.psum(
+            pre["overflow"].astype(jnp.int32)
+            + new["overflow"].astype(jnp.int32), AXIS
+        )
+        return (new["hi"], new["lo"], new["count"], new["left_cnt"],
+                new["right_cnt"], occ_total, occ_admitted, res.overflow,
+                table_ovf)
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS),) * 8,
+        out_specs=(P(AXIS),) * 5 + (P(),) * 4,
+        check_rep=False,
+    )
+    out = fn(reads.bases, reads.lengths, f2_bits,
+             run["hi"], run["lo"], run["count"], run["left_cnt"],
+             run["right_cnt"])
+    new_run = dict(zip(("hi", "lo", "count", "left_cnt", "right_cnt"), out[:5]))
+    occ_total, occ_admitted, route_ovf, table_ovf = out[5:]
+    return new_run, (occ_total, occ_admitted), route_ovf, table_ovf
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,43 @@
+"""Out-of-core streaming ingest + assembly (DESIGN.md §7).
+
+The paper's headline capability — assembling datasets far larger than
+memory (7.5B reads / 2.6 TB for Twitchell Wetlands) — enters this repo
+here: datasets are *batch sources* (re-iterable streams of fixed-shape
+`ReadSet` batches), k-mer analysis is the two-pass Bloom admission of
+§II-A/§II-B with persistent (owner-partitioned, under `Mesh`) filter
+state, and every per-batch partial folds into fixed-capacity tables, so
+device memory is a function of batch size and plan capacities — never of
+total read count.
+
+    from repro.api import Assembler, AssemblyPlan, Local
+    from repro.stream import batches_from_readset
+
+    plan = AssemblyPlan.from_stream(batch_reads=2048, max_len=60)
+    out = Assembler(plan, Local()).assemble_stream(
+        batches_from_readset(reads, 2048))
+"""
+from .batches import (
+    BatchSource,
+    batches_from_readset,
+    check_batch_shapes,
+    pad_batch,
+    require_reiterable,
+)
+from .analysis import (
+    StreamCheckpoint,
+    StreamStats,
+    sharded_streaming_kmer_analysis,
+    streaming_kmer_analysis,
+)
+
+__all__ = [
+    "BatchSource",
+    "StreamCheckpoint",
+    "StreamStats",
+    "batches_from_readset",
+    "check_batch_shapes",
+    "pad_batch",
+    "require_reiterable",
+    "sharded_streaming_kmer_analysis",
+    "streaming_kmer_analysis",
+]

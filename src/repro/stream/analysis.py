@@ -1,0 +1,338 @@
+"""Two-pass streaming k-mer analysis over batch sources (paper §II-A/§II-B).
+
+The paper's headline capability — assembling datasets that exceed memory —
+rests on never holding the read set or the raw k-mer occurrence population
+resident at once.  This module streams fixed-shape batches through the
+Bloom-filter two-sighting rule with *persistent* filter state:
+
+  pass 1  every batch's canonical occurrences enter Bloom filter f1; a key
+          already in f1 (sighted in an earlier batch) or duplicated within
+          its own batch (exact, via sort) marks f2 — "seen at least twice".
+  pass 2  batches re-stream; only occurrences whose key is in f2 are
+          counted, so the per-batch partial tables and the persistent
+          running table never hold the error-singleton mass (Pell et al.'s
+          trick, §II-B), shrinking required capacity by the error fraction.
+
+Each pass-2 partial folds into a persistent running count table via the
+associative `merge_counts` reduce, so the device working set is one batch
+plus fixed-capacity tables — independent of total read count (the
+`AssemblyPlan.from_stream` guarantee).  Under a `Mesh`, both filters and
+the running table are owner-partitioned: occurrences route to their hash
+owner (`dist.kmer_owner`) before touching filter or table state, making
+each key's admission and count globally exact (`dist.stages`).
+
+Batch boundaries are checkpoint boundaries: `StreamCheckpoint` snapshots
+(filters, running table) through `train.checkpoint.Checkpointer`'s
+atomic-rename machinery, so an interrupted ingest resumes at the last
+completed batch instead of re-streaming from zero (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bloom, kmer_analysis
+
+from .batches import require_reiterable
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Accounting for one streamed analysis (reported, like overflow)."""
+
+    batches_pass1: int = 0
+    batches_pass2: int = 0
+    occurrences_total: int = 0
+    occurrences_admitted: int = 0
+    table_overflow: int = 0
+    route_overflow: int = 0
+    resumed: bool = False
+
+    @property
+    def admitted_frac(self) -> float:
+        return self.occurrences_admitted / max(self.occurrences_total, 1)
+
+
+class StreamCheckpoint:
+    """Batch-boundary checkpoint/resume for streaming state.
+
+    Thin adapter over `train.checkpoint.Checkpointer` (atomic rename,
+    async write): the checkpoint step encodes (pass, next_batch) as
+    `pass * PHASE + next_batch`, and the state is a flat dict of arrays —
+    Bloom bits, the running table, the stats counters, and a dataset/plan
+    fingerprint.  Restoring against a different fingerprint raises
+    instead of silently serving a previous run's table.
+    """
+
+    PHASE = 1 << 20  # batches per pass bound for step encoding
+
+    def __init__(self, directory: str):
+        from repro.train.checkpoint import Checkpointer
+
+        self.ck = Checkpointer(directory, keep=2)
+
+    def save(self, phase: int, next_batch: int, state: dict) -> None:
+        self.ck.save(phase * self.PHASE + next_batch, state)
+
+    def restore(self, template: dict):
+        """-> (state, phase, next_batch) or (template, 0, 0) if none."""
+        try:
+            state, step = self.ck.restore(template)
+        except FileNotFoundError:
+            return template, 0, 0
+        if int(state["fp"]) != int(template["fp"]):
+            raise ValueError(
+                "checkpoint directory holds streaming state for a "
+                "different dataset or plan (fingerprint mismatch) — point "
+                "checkpoint_dir at a fresh directory per run"
+            )
+        return state, step // self.PHASE, step % self.PHASE
+
+    def wait(self) -> None:
+        self.ck.wait()
+
+
+def _fingerprint(batches, **params) -> np.uint32:
+    """CRC of the analysis parameters + the first batch's content.
+
+    Guards checkpoint resume against a stale directory: different reads
+    or a different (k, capacity, bloom budget) re-plan must not restore."""
+    h = zlib.crc32(repr(sorted(params.items())).encode())
+    for batch in batches:
+        h = zlib.crc32(np.asarray(batch.bases).tobytes(), h)
+        h = zlib.crc32(np.asarray(batch.lengths).tobytes(), h)
+        break
+    return np.uint32(h)
+
+
+_COUNTERS = ("batches_pass1", "batches_pass2", "occurrences_total",
+             "occurrences_admitted", "table_overflow", "route_overflow")
+
+
+def _counters(stats: "StreamStats") -> np.ndarray:
+    return np.asarray([getattr(stats, f) for f in _COUNTERS], np.int64)
+
+
+def _restore_counters(stats: "StreamStats", arr) -> None:
+    for f, v in zip(_COUNTERS, np.asarray(arr).tolist()):
+        setattr(stats, f, int(v))
+
+
+def _run_two_pass(batches, *, stats: "StreamStats", checkpoint_dir,
+                  fingerprint_params: dict, state_fn, load_fn,
+                  pass1_step, pass2_step) -> None:
+    """The two-pass streaming skeleton, shared by Local and Mesh.
+
+    Owns everything that must not drift between the two paths: the
+    checkpoint restore (with fingerprint guard), batch skipping, per-batch
+    saves, counter persistence, and the pass1-vs-pass2 count check.  The
+    callbacks close over the actual filter/table state: `state_fn(fp)`
+    snapshots it, `load_fn(state)` restores it, `pass1_step(batch)` /
+    `pass2_step(batch)` process one batch and update `stats` counters.
+    """
+    require_reiterable(batches)
+    ck = StreamCheckpoint(checkpoint_dir) if checkpoint_dir else None
+    fp = np.uint32(0)
+    phase, start = 0, 0
+    if ck is not None:
+        fp = _fingerprint(batches, **fingerprint_params)
+        state, phase, start = ck.restore(state_fn(fp))
+        load_fn(state)
+        _restore_counters(stats, state["counters"])
+        stats.resumed = phase > 0 or start > 0
+
+    if phase == 0:
+        for i, batch in enumerate(batches):
+            if i < start:
+                continue
+            pass1_step(batch)
+            stats.batches_pass1 += 1
+            if ck is not None:
+                ck.save(0, i + 1, state_fn(fp))
+        phase, start = 1, 0
+
+    for i, batch in enumerate(batches):
+        if i < start:
+            continue
+        pass2_step(batch)
+        stats.batches_pass2 += 1
+        if ck is not None:
+            ck.save(1, i + 1, state_fn(fp))
+    if ck is not None:
+        ck.wait()
+    if not stats.resumed and stats.batches_pass2 != stats.batches_pass1:
+        raise RuntimeError(
+            f"batch source yielded {stats.batches_pass1} batches in pass 1 "
+            f"but {stats.batches_pass2} in pass 2 — the source must "
+            f"re-stream identically (is it deterministic?)"
+        )
+
+
+def streaming_kmer_analysis(
+    batches,
+    *,
+    k: int,
+    capacity: int,
+    bloom_bits: int,
+    num_hashes: int = 3,
+    batch_capacity: Optional[int] = None,
+    checkpoint_dir: Optional[str] = None,
+):
+    """Single-device two-pass streamed count table.
+
+    Args:
+      batches: re-iterable source of fixed-shape ReadSet batches
+        (`repro.stream.batches`); iterated twice.
+      capacity: running-table rows — sized for the true (>= 2-sighting)
+        k-mer population, NOT the raw occurrence population.
+      bloom_bits: slots per Bloom filter (two filters are kept).
+      batch_capacity: per-batch partial-table rows (default `capacity`).
+      checkpoint_dir: when set, state checkpoints after every batch and a
+        later call with the same directory resumes there.
+    Returns:
+      (run, stats): the running count-table dict (same schema as
+      `count_occurrences`; feed to `merge_counts`/`finalize`) and a
+      `StreamStats`.  The exact `min_count` filter downstream removes the
+      few Bloom-false-positive singletons that slip through.
+    """
+    batch_capacity = batch_capacity or capacity
+    f1 = bloom.empty(bloom_bits, num_hashes)
+    f2 = bloom.empty(bloom_bits, num_hashes)
+    run = kmer_analysis.empty_count_table(capacity)
+    stats = StreamStats()
+
+    def state_fn(fp):
+        return {"f1_bits": f1.bits, "f2_bits": f2.bits,
+                "counters": _counters(stats), "fp": np.asarray(fp),
+                **{f"run_{key}": v for key, v in run.items()}}
+
+    def load_fn(state):
+        nonlocal f1, f2, run
+        f1 = bloom.BloomFilter(bits=jnp.asarray(state["f1_bits"]),
+                               num_hashes=num_hashes)
+        f2 = bloom.BloomFilter(bits=jnp.asarray(state["f2_bits"]),
+                               num_hashes=num_hashes)
+        run = {key[len("run_"):]: jnp.asarray(v) for key, v in state.items()
+               if key.startswith("run_")}
+
+    def pass1_step(batch):
+        nonlocal f1, f2
+        hi, lo, _, _, valid = kmer_analysis.occurrences(batch, k=k)
+        f1, f2 = kmer_analysis.bloom_observe(f1, f2, hi, lo, valid)
+
+    def pass2_step(batch):
+        nonlocal run
+        hi, lo, left, right, valid = kmer_analysis.occurrences(batch, k=k)
+        admitted = kmer_analysis.bloom_admit(f2, hi, lo, valid)
+        stats.occurrences_total += int(valid.sum())
+        stats.occurrences_admitted += int(admitted.sum())
+        tab = kmer_analysis.count_occurrences(
+            hi, lo, left, right, admitted, capacity=batch_capacity
+        )
+        run = kmer_analysis.merge_counts(run, tab, capacity=capacity)
+        # per-fold overflow events (>= 1 means keys were cut; §3.4); the
+        # counters checkpoint with the state, so a resume keeps them
+        stats.table_overflow += int(tab["overflow"]) + int(run["overflow"])
+
+    _run_two_pass(
+        batches, stats=stats, checkpoint_dir=checkpoint_dir,
+        fingerprint_params=dict(k=k, capacity=capacity,
+                                bloom_bits=bloom_bits,
+                                num_hashes=num_hashes),
+        state_fn=state_fn, load_fn=load_fn,
+        pass1_step=pass1_step, pass2_step=pass2_step,
+    )
+    return run, stats
+
+
+def sharded_streaming_kmer_analysis(
+    batches,
+    mesh,
+    *,
+    k: int,
+    capacity: int,
+    bloom_bits: int,
+    pre_capacity: int,
+    route_capacity: Optional[int] = None,
+    num_hashes: int = 3,
+    checkpoint_dir: Optional[str] = None,
+):
+    """Owner-partitioned two-pass streamed count table over a mesh.
+
+    Filters and the running table are sharded by k-mer hash ownership:
+    each batch pre-combines per shard, routes entries to their owners
+    (`exchange.route`), and the owner updates ITS filter shard / folds
+    into ITS slice of the running table — so admission and counts are
+    globally exact, exactly as in `dist.stages.sharded_kmer_analysis`.
+
+    Args:
+      bloom_bits: slots per PER-SHARD filter (the global Bloom budget is
+        `num_shards * bloom_bits` per filter).
+      capacity: PER-SHARD running-table rows.
+    Returns:
+      (run, stats): running table dict with flat [S * capacity] arrays in
+      the owner layout of `sharded_kmer_analysis` — `gather_ksets`-ready —
+      plus a `StreamStats` with route overflow accounting.
+    """
+    from repro.dist import stages
+    from repro.dist.pipeline import mesh_shards
+
+    S = mesh_shards(mesh)
+    f1_bits = jnp.zeros((S, bloom_bits), bool)
+    f2_bits = jnp.zeros((S, bloom_bits), bool)
+    empty = kmer_analysis.empty_count_table(capacity)
+    # owner layout: rows [s*capacity, (s+1)*capacity) are shard s's slice
+    run = {
+        key: jnp.tile(empty[key][None], (S,) + (1,) * empty[key].ndim)
+        .reshape((S * capacity,) + empty[key].shape[1:])
+        for key in ("hi", "lo", "count", "left_cnt", "right_cnt")
+    }
+    stats = StreamStats()
+
+    def state_fn(fp):
+        return {"f1_bits": f1_bits, "f2_bits": f2_bits,
+                "counters": _counters(stats), "fp": np.asarray(fp),
+                **{f"run_{key}": v for key, v in run.items()}}
+
+    def load_fn(state):
+        nonlocal f1_bits, f2_bits, run
+        f1_bits = jnp.asarray(state["f1_bits"])
+        f2_bits = jnp.asarray(state["f2_bits"])
+        run = {key[len("run_"):]: jnp.asarray(v) for key, v in state.items()
+               if key.startswith("run_")}
+
+    def pass1_step(batch):
+        nonlocal f1_bits, f2_bits
+        f1_bits, f2_bits, route_ovf, pre_ovf = stages.sharded_bloom_observe(
+            batch, mesh, f1_bits, f2_bits, k=k,
+            pre_capacity=pre_capacity, route_capacity=route_capacity,
+            num_hashes=num_hashes,
+        )
+        stats.route_overflow += int(route_ovf)
+        stats.table_overflow += int(pre_ovf)
+
+    def pass2_step(batch):
+        nonlocal run
+        run, counts, route_ovf, table_ovf = stages.sharded_stream_fold(
+            batch, mesh, f2_bits, run, k=k, capacity=capacity,
+            pre_capacity=pre_capacity, route_capacity=route_capacity,
+            num_hashes=num_hashes,
+        )
+        stats.occurrences_total += int(counts[0])
+        stats.occurrences_admitted += int(counts[1])
+        stats.route_overflow += int(route_ovf)
+        stats.table_overflow += int(table_ovf)
+
+    _run_two_pass(
+        batches, stats=stats, checkpoint_dir=checkpoint_dir,
+        fingerprint_params=dict(k=k, capacity=capacity,
+                                bloom_bits=bloom_bits,
+                                num_hashes=num_hashes, num_shards=S),
+        state_fn=state_fn, load_fn=load_fn,
+        pass1_step=pass1_step, pass2_step=pass2_step,
+    )
+    return run, stats

@@ -1,0 +1,125 @@
+"""Fixed-shape read-batch sources for out-of-core assembly (DESIGN.md §7).
+
+The streaming pipeline never holds more than one batch of read state on
+device, so a dataset is represented as a *batch source*: any object that
+can be iterated repeatedly (`iter(source)` yields a fresh pass) and whose
+every batch is a capacity-padded `ReadSet` of identical shape
+`[batch_reads, max_len]`.  Re-iterability matters because the two-pass
+Bloom admission (§II-A) and every assembly round re-stream the data;
+identical shapes matter because XLA then compiles each per-batch stage
+once and reuses it for every batch of every pass.
+
+Padding rows are inert by the same convention as `dist.shard_reads`:
+zero length, all-INVALID bases, mate -1.  Mate pointers are batch-local
+(a batch always holds whole pairs), so per-batch mate projection and
+splint/span witnesses need no global read indices.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, List
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.types import INVALID_BASE, ReadSet
+
+
+def pad_batch(reads: ReadSet, batch_reads: int) -> ReadSet:
+    """Pad a ReadSet up to exactly `batch_reads` rows with inert rows."""
+    R, L = reads.bases.shape
+    if R > batch_reads:
+        raise ValueError(f"batch has {R} rows > batch_reads={batch_reads}")
+    if R == batch_reads:
+        return reads
+    pad = batch_reads - R
+    return ReadSet(
+        bases=jnp.concatenate(
+            [reads.bases, jnp.full((pad, L), INVALID_BASE, jnp.uint8)]
+        ),
+        lengths=jnp.concatenate([reads.lengths, jnp.zeros((pad,), jnp.int32)]),
+        mate=jnp.concatenate([reads.mate, jnp.full((pad,), -1, jnp.int32)]),
+        insert_size=reads.insert_size,
+    )
+
+
+def batches_from_readset(reads: ReadSet, batch_reads: int) -> List[ReadSet]:
+    """Slice an in-memory ReadSet into fixed-shape, pair-atomic batches.
+
+    Reads keep their original order (batch b holds rows
+    [b * batch_reads, (b+1) * batch_reads)), so concatenating per-batch
+    stage outputs reproduces the in-memory layout — the basis of the
+    streamed-vs-in-memory parity tests.  Mate pointers rebase to
+    batch-local indices; a mate that falls outside its read's batch is
+    severed (-1), which `batch_reads % 2 == 0` plus the repo's interleaved
+    (r1, r2) pair convention prevents.
+    """
+    if batch_reads < 2 or batch_reads % 2:
+        raise ValueError(f"batch_reads={batch_reads} must be even and >= 2")
+    R = int(reads.num_reads)
+    mate = np.asarray(reads.mate)
+    out = []
+    for start in range(0, R, batch_reads):
+        stop = min(start + batch_reads, R)
+        m = mate[start:stop]
+        local = np.where(
+            (m >= start) & (m < stop), m - start, -1
+        ).astype(np.int32)
+        out.append(
+            pad_batch(
+                ReadSet(
+                    bases=reads.bases[start:stop],
+                    lengths=reads.lengths[start:stop],
+                    mate=jnp.asarray(local),
+                    insert_size=reads.insert_size,
+                ),
+                batch_reads,
+            )
+        )
+    return out
+
+
+class BatchSource:
+    """Re-iterable batch source built from an iterator factory.
+
+    Wraps single-shot generators (chunked FASTQ parse, MGSim chunk
+    generation) into the re-iterable contract: each `iter()` calls
+    `make_iter()` afresh, so pass 2 and later rounds re-stream from the
+    start.  The factory must be deterministic — both passes must see the
+    same batches in the same order.
+    """
+
+    def __init__(self, make_iter: Callable[[], Iterator[ReadSet]]):
+        self._make_iter = make_iter
+
+    def __iter__(self) -> Iterator[ReadSet]:
+        return iter(self._make_iter())
+
+
+def require_reiterable(batches) -> None:
+    """Reject single-shot iterators up front (they return themselves from
+    `iter()`), instead of letting pass 2 silently see an exhausted stream
+    and assemble nothing."""
+    if iter(batches) is batches:
+        raise TypeError(
+            "batch source is a single-shot iterator; the streaming "
+            "pipeline iterates the data several times (two-pass Bloom "
+            "admission, per-round alignment) — wrap the generator in "
+            "repro.stream.BatchSource(lambda: <make iterator>) or pass a "
+            "sequence"
+        )
+
+
+def check_batch_shapes(batches) -> tuple:
+    """Validate the source contract; returns (batch_reads, max_len).
+
+    Rejects single-shot iterators and streams at most one batch as a
+    shape probe — callers use this on the first pass rather than
+    materializing the source.
+    """
+    require_reiterable(batches)
+    it = iter(batches)
+    try:
+        first = next(it)
+    except StopIteration:
+        raise ValueError("empty batch source") from None
+    return int(first.num_reads), int(first.max_len)

@@ -1,0 +1,194 @@
+"""Streamed Algorithm 1 + Algorithm 3: assemble from a batch source.
+
+`Assembler.assemble_stream(batches)` lands here.  The loop mirrors the
+in-memory driver stage for stage — same k schedule, same contig-scale
+graph work, same scaffolding — but every read-proportional stage consumes
+one fixed-shape batch at a time (DESIGN.md §7):
+
+  * k-mer analysis: two-pass Bloom admission + running owner-partitioned
+    fold (`repro.stream.analysis`), checkpointable at batch boundaries;
+  * alignment: per-batch against the replicated contigs/seed index (the
+    context decides one-device or per-shard placement); the [R, 2]
+    alignment rows accumulate on host — they are the O(R) *summary* of the
+    reads, orders of magnitude smaller than the O(R·L) bases that stay
+    out of core;
+  * local assembly & gap closing: per-batch mate projection feeds
+    `accumulate_walk_tables`; the fixed-capacity (contig, mer) tables hold
+    the whole dataset's evidence while only one batch of reads is
+    resident, and the walks run once from the accumulated tables;
+  * scaffolding: per-batch splint/span witnesses concatenate (the layout
+    `candidate_links` documents for mesh shards applies verbatim to
+    batches) before one contig-scale `links_from_candidates`.
+
+Parity: over the same reads, this path reproduces the in-memory
+scaffolds — the count fold is exact, Bloom admission only removes
+singletons the `min_count` floor would drop anyway, and the walk tables
+are batch-split independent (asserted in tests/test_stream.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import alignment, local_assembly, gap_closing, scaffolding
+
+from .batches import check_batch_shapes
+
+
+def _concat_alignments(parts):
+    """Stack per-batch alignment rows into the global layout."""
+    return alignment.Alignments(
+        *[
+            jnp.asarray(np.concatenate([np.asarray(getattr(p, f)) for p in parts]))
+            for f in alignment.Alignments._fields
+        ]
+    )
+
+
+def _align_and_tables(ctx, batches, contigs, sidx, seed_len, *,
+                      wt=None, mer_sizes=None, tag_bits=None,
+                      witnesses=None, clens=None):
+    """One pass over the batches: align each, optionally fold walk tables
+    and link witnesses.  Returns (alignments, wt, witness arrays, counts)."""
+    parts = []
+    wit = []
+    aligned = 0
+    valid_rows = 0
+    for batch in batches:
+        al_b = ctx.align_batch(batch, contigs, sidx, seed_len)
+        parts.append(al_b)
+        aln0 = al_b.contig[:, 0]
+        aligned += int((aln0 >= 0).sum())
+        valid_rows += int((batch.lengths > 0).sum())
+        if wt is not None:
+            rc = local_assembly.localize_reads(batch, aln0)
+            wt = local_assembly.accumulate_walk_tables(
+                wt, batch, rc, mer_sizes=mer_sizes, tag_bits=tag_bits
+            )
+        if witnesses is not None:
+            wit.append(scaffolding.candidate_links(al_b, batch, clens))
+    al = _concat_alignments(parts)
+    if witnesses is not None:
+        wit = tuple(
+            jnp.asarray(np.concatenate([np.asarray(w[i]) for w in wit]))
+            for i in range(5)
+        )
+    return al, wt, wit, (aligned, valid_rows)
+
+
+def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
+                    checkpoint_dir=None) -> dict:
+    """Full out-of-core pipeline over a re-iterable batch source."""
+    from repro.api.assembler import IterationStats, contig_stage
+    from repro.api.plan import PlanError
+
+    if plan.min_count < 2:
+        raise PlanError(
+            f"assemble_stream requires min_count >= 2 (got "
+            f"{plan.min_count}): the streamed path admits k-mers through "
+            f"the two-sighting Bloom rule, which by construction drops "
+            f"single-occurrence k-mers — with min_count=1 it would "
+            f"silently diverge from the in-memory path; use assemble() "
+            f"to keep singletons"
+        )
+    check_batch_shapes(batches)
+    ctx.prepare_stream(plan, checkpoint_dir=checkpoint_dir)
+    plan = ctx.plan  # Mesh may have re-derived per-shard capacities
+    insert_size = None
+    prev = None
+    contigs = alive = None
+    all_stats = []
+    stream_stats = {}
+    for k in plan.ks():
+        kset, kovf, sstats = ctx.stream_kmer_set(k, batches, prev)
+        stream_stats[k] = sstats
+        contigs, alive, trav, bub, prn = contig_stage(kset, k, plan)
+        seed_len = min(k, 27)
+        sidx = alignment.build_seed_index(
+            contigs, alive, seed_len=seed_len, capacity=plan.seed_cap
+        )
+        wt = None
+        mer_sizes = tag_bits = None
+        if plan.run_local_assembly:
+            mer_sizes = plan.ladder(k)
+            tag_bits = min(16, 62 - 2 * max(mer_sizes))
+            wt = local_assembly.empty_walk_tables(
+                mer_sizes=mer_sizes, capacity=plan.walk_capacity
+            )
+        al, wt, _, (aligned, valid_rows) = _align_and_tables(
+            ctx, batches, contigs, sidx, seed_len,
+            wt=wt, mer_sizes=mer_sizes, tag_bits=tag_bits,
+        )
+        if insert_size is None:
+            for batch in batches:
+                insert_size = int(batch.insert_size)
+                break
+        ext_bases = 0
+        if plan.run_local_assembly:
+            old_total = int(jnp.where(alive, contigs.lengths, 0).sum())
+            contigs, _walk = local_assembly.extend_with_tables(
+                wt, contigs, alive, mer_sizes=mer_sizes, max_ext=plan.max_ext
+            )
+            ext_bases = (
+                int(jnp.where(alive, contigs.lengths, 0).sum()) - old_total
+            )
+        all_stats.append(IterationStats(
+            k=k,
+            n_kmers=int(kset.used.sum()),
+            n_contigs=int(alive.sum()),
+            n_bubbles=int(bub.merged_away.sum()),
+            n_hair=int(bub.hair.sum()),
+            n_pruned=int(prn.pruned),
+            aligned_frac=aligned / max(valid_rows, 1),
+            extended_bases=ext_bases,
+            overflow=bool(kovf.get("table")) or bool(trav.overflow),
+            route_overflow=int(kovf.get("route", 0)),
+        ))
+        prev = (contigs, alive)
+
+    # ---- Algorithm 3 over the final contigs ----
+    k_last = plan.ks()[-1]
+    seed_len = min(k_last, 27)
+    sidx = alignment.build_seed_index(
+        contigs, alive, seed_len=seed_len, capacity=plan.seed_cap
+    )
+    gap_mers = plan.ladder(k_last)
+    gap_tag_bits = min(16, 62 - 2 * max(gap_mers))
+    wt_gap = local_assembly.empty_walk_tables(
+        mer_sizes=gap_mers, capacity=plan.walk_capacity
+    )
+    clens = jnp.where(alive, contigs.lengths, 0)
+    al, wt_gap, cands, _ = _align_and_tables(
+        ctx, batches, contigs, sidx, seed_len,
+        wt=wt_gap, mer_sizes=gap_mers, tag_bits=gap_tag_bits,
+        witnesses=True, clens=clens,
+    )
+    ea, eb, gap, valid, is_splint = cands
+    links = scaffolding.links_from_candidates(
+        ea, eb, gap, valid, is_splint, alive,
+        capacity=plan.link_capacity, min_support=plan.min_link_support,
+    )
+    scaffs, links, suspended, comp = scaffolding.scaffold_from_links(
+        links, contigs, alive, float(insert_size),
+        max_members=plan.max_members, hmm_hit=hmm_hit,
+    )
+    seqs = gap_closing.close_and_render_with_tables(
+        scaffs, contigs, wt_gap,
+        seed_len=min(k_last, 25),
+        mer_sizes=gap_mers,
+        max_scaffold_len=plan.max_scaffold_len,
+    )
+    return {
+        "contigs": contigs,
+        "alive": alive,
+        "alignments": al,
+        "scaffolds": scaffs,
+        "scaffold_seqs": seqs,
+        "links": links,
+        "suspended": suspended,
+        "components": comp,
+        "stats": all_stats,
+        "stream_stats": stream_stats,
+        "plan": plan,
+        "overflow": ctx.overflow(),
+    }

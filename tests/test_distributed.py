@@ -195,6 +195,40 @@ def test_mesh_assemble_matches_local():
     )
 
 
+def test_stream_assemble_mesh_matches_in_memory():
+    """CI parity smoke (ISSUE 3): Assembler.assemble_stream over a small
+    mgsim dataset split into >= 2 batches, on an 8-device mesh with the
+    owner-partitioned two-pass Bloom ingest, must reproduce the in-memory
+    Local scaffolds (bench_quality tolerance; in practice bit-identical —
+    asserted, since every fold in the streamed path is exact)."""
+    run_devices_script(
+        """
+        from repro.api import Assembler, AssemblyPlan, Local, Mesh
+        from repro.data import mgsim
+        from repro.stream import batches_from_readset
+
+        comm = mgsim.sample_community(5, num_genomes=3, genome_len=300,
+                                      abundance_sigma=0.3)
+        reads, _ = mgsim.generate_reads(6, comm, num_pairs=400, read_len=60,
+                                        err_rate=0.003)
+        plan = AssemblyPlan.from_dataset(reads, (17, 21, 4), num_shards=8,
+                                         unique_rate=0.2)
+        out_mem = Assembler(plan, Local()).assemble(reads)
+        batches = batches_from_readset(reads, 256)
+        assert len(batches) >= 2, len(batches)
+        out_st = Assembler(plan, Mesh(num_shards=8)).assemble_stream(batches)
+        for a, b in zip(jax.tree.leaves(out_mem["scaffold_seqs"]),
+                        jax.tree.leaves(out_st["scaffold_seqs"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert all(v == 0 for v in out_st["overflow"].values()), (
+            out_st["overflow"])
+        print("STREAM MESH PARITY OK")
+        """,
+        # in-memory Local + streamed Mesh in one interpreter; compile-bound
+        timeout=2400,
+    )
+
+
 def test_read_localization_improves_owner_locality():
     run_devices_script(
         """

@@ -1,5 +1,6 @@
-"""FASTQ ingest: parse -> trim -> ReadSet roundtrip."""
+"""FASTQ ingest: parse -> trim -> ReadSet roundtrip + streaming batches."""
 import numpy as np
+import pytest
 
 from repro.data import fastq
 
@@ -34,3 +35,70 @@ def test_to_readset():
     # fasta rendering roundtrip
     out = fastq.write_fasta([np.asarray(rs.bases[0, :12])])
     assert "ACGTACGTACGT" in out
+
+
+def test_malformed_header_raises_parse_error():
+    bad = FQ.replace("@r2", "r2", 1)
+    with pytest.raises(fastq.FastqParseError, match="line 5.*header"):
+        fastq.parse_fastq(bad)
+
+
+def test_malformed_separator_raises_parse_error():
+    bad = FQ.replace("+", "*", 1)
+    with pytest.raises(fastq.FastqParseError, match="separator"):
+        fastq.parse_fastq(bad)
+
+
+def test_seq_qual_length_mismatch_raises():
+    bad = FQ.replace("IIIIIIIIIIII", "III", 1)
+    with pytest.raises(fastq.FastqParseError, match="length"):
+        fastq.parse_fastq(bad)
+
+
+def test_empty_and_blank_text_parse_to_no_records():
+    assert fastq.parse_fastq("") == []
+    assert fastq.parse_fastq("  ") == []  # blank text, not a path
+    assert fastq.parse_fastq("\n\n") == []
+    # a lone truncated record line is text (dropped as partial), not a path
+    assert fastq.parse_fastq("@r1") == []
+
+
+def test_parse_error_line_numbers_survive_blank_lines():
+    bad = "@r1\n\n\nACGT\n*\nIIII\n"  # '*' separator is on file line 5
+    with pytest.raises(fastq.FastqParseError, match="line 5.*separator"):
+        fastq.parse_fastq(bad)
+
+
+def test_trailing_partial_record_tolerated():
+    partial = FQ + "@r3\nACGT\n"  # header+seq only, no separator/qual
+    recs = fastq.parse_fastq(partial)
+    assert len(recs) == 2  # the partial record is dropped, not an error
+
+
+def test_parse_is_streaming_not_line_list():
+    """Records come off a lazy line iterator — the parse must consume a
+    generator incrementally (a whole-file line list cannot)."""
+
+    def lines():
+        yield from FQ.splitlines(keepends=True)
+
+    it = fastq.iter_fastq_records(lines())
+    first = next(it)
+    assert "".join("ACGTN"[b] for b in first[0]) == "ACGTACGTACGT"
+    assert len(list(it)) == 1
+
+
+def test_iter_fastq_batches_fixed_shape_and_padding():
+    many = FQ * 3  # 6 reads
+    batches = list(fastq.iter_fastq_batches(
+        many, batch_reads=4, max_len=12, min_len=4
+    ))
+    assert len(batches) == 2
+    for b in batches:
+        assert b.bases.shape == (4, 12)
+    # final batch: 2 real reads + 2 inert pad rows
+    lens = np.asarray(batches[1].lengths)
+    assert (lens[:2] > 0).all() and (lens[2:] == 0).all()
+    assert (np.asarray(batches[1].mate)[2:] == -1).all()
+    # batch-local mates pair within the batch
+    assert np.asarray(batches[0].mate).tolist() == [1, 0, 3, 2]
