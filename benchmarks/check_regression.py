@@ -1,0 +1,131 @@
+"""Benchmark regression gate: current BENCH_*.json vs committed baselines.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \\
+        [--baseline-dir benchmarks/baselines] [--out-dir $BENCH_OUT] \\
+        [--tolerance 1.25]
+
+Each baseline file `benchmarks/baselines/BENCH_<name>.json` pins the gated
+subset of a bench's `derived` scalars:
+
+    {
+      "name": "kernels",
+      "gate": {
+        "pallas_over_ref": {"value": 1.0, "max_ratio": 1.25},
+        "metahipmer_genome_fraction": {"value": 0.98, "min_ratio": 0.97}
+      }
+    }
+
+Semantics per metric:
+  * `max_ratio` — fail when current > value * max_ratio (lower-is-better:
+    times, ratios).  Defaults to the global --tolerance (1.25, the CI
+    ">25% regression" rule) when neither bound is given.
+  * `min_ratio` — fail when current < value * min_ratio (higher-is-better:
+    genome fraction, load balance).
+  * a gated metric missing from the current run FAILS — a bench that
+    silently stopped emitting its headline number is a regression, not a
+    pass; so does a missing/stale/failed record.
+
+Baselines are deliberately explicit JSON committed to the repo: moving a
+bar is a reviewed diff, never a side effect of a lucky runner.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check(baseline_dir: str, out_dir: str, tolerance: float) -> list:
+    """Returns a list of human-readable failure strings (empty = pass)."""
+    failures = []
+    baseline_paths = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
+    if not baseline_paths:
+        return [f"no baselines found under {baseline_dir!r} — the gate "
+                f"would pass vacuously; seed baselines first"]
+    for bpath in baseline_paths:
+        base = _load(bpath)
+        name = base.get("name") or os.path.basename(bpath)[len("BENCH_"):-len(".json")]
+        gate = base.get("gate") or {}
+        if not gate:
+            failures.append(f"{name}: baseline {bpath} has an empty 'gate'")
+            continue
+        cpath = os.path.join(out_dir, f"BENCH_{name}.json")
+        if not os.path.exists(cpath):
+            failures.append(f"{name}: no current record at {cpath} (bench "
+                            f"did not run?)")
+            continue
+        cur = _load(cpath)
+        if cur.get("bench_failed"):
+            failures.append(f"{name}: bench FAILED in this run")
+            continue
+        if cur.get("stale"):
+            failures.append(f"{name}: record is stale (written before this "
+                            f"run started) — the bench did not re-run")
+            continue
+        derived = cur.get("derived") or {}
+        for metric, spec in gate.items():
+            if not isinstance(spec, dict):
+                spec = {"value": spec}
+            if metric not in derived:
+                failures.append(
+                    f"{name}.{metric}: missing from the current run's "
+                    f"derived metrics {sorted(derived)}"
+                )
+                continue
+            got = float(derived[metric])
+            ref = float(spec["value"])
+            max_ratio = spec.get("max_ratio")
+            min_ratio = spec.get("min_ratio")
+            if max_ratio is None and min_ratio is None:
+                max_ratio = tolerance
+            if max_ratio is not None and got > ref * float(max_ratio):
+                failures.append(
+                    f"{name}.{metric}: {got:.4g} > baseline {ref:.4g} * "
+                    f"{float(max_ratio):.3g} — regression"
+                )
+            elif min_ratio is not None and got < ref * float(min_ratio):
+                failures.append(
+                    f"{name}.{metric}: {got:.4g} < baseline {ref:.4g} * "
+                    f"{float(min_ratio):.3g} — regression"
+                )
+            else:
+                bound = (f"<= {ref * float(max_ratio):.4g}"
+                         if max_ratio is not None
+                         else f">= {ref * float(min_ratio):.4g}")
+                print(f"OK {name}.{metric}: {got:.4g} (baseline {ref:.4g}, "
+                      f"bound {bound})")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir",
+                    default=os.path.join("benchmarks", "baselines"))
+    ap.add_argument("--out-dir", default=None,
+                    help="bench record dir (default: $BENCH_OUT or "
+                         "experiments/bench)")
+    ap.add_argument("--tolerance", type=float, default=1.25,
+                    help="default max_ratio for gated metrics (1.25 = "
+                         "fail on >25%% regression)")
+    args = ap.parse_args()
+    from . import record
+
+    out_dir = args.out_dir or record.out_dir()
+    failures = check(args.baseline_dir, out_dir, args.tolerance)
+    if failures:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nbench regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,8 +31,13 @@ def out_dir() -> str:
     return os.environ.get("BENCH_OUT", os.path.join("experiments", "bench"))
 
 
-def emit(name: str, rows, derived: Optional[dict] = None) -> str:
-    """Write BENCH_<name>.json; returns the path."""
+def emit(name: str, rows, derived: Optional[dict] = None,
+         extra: Optional[dict] = None) -> str:
+    """Write BENCH_<name>.json; returns the path.
+
+    `extra` merges additional top-level keys into the record (run.py uses
+    it to persist stale/bench_failed flags — and the original written_at —
+    so the regression gate can refuse flagged records)."""
     d = out_dir()
     os.makedirs(d, exist_ok=True)
     path = os.path.join(d, f"BENCH_{name}.json")
@@ -43,6 +48,8 @@ def emit(name: str, rows, derived: Optional[dict] = None) -> str:
         "rows": rows,
         "derived": derived or {},
     }
+    if extra:
+        payload.update(extra)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True, default=float)
         f.write("\n")

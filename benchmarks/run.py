@@ -23,17 +23,27 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     args, _ = ap.parse_known_args()
-    only = set(args.only.split(",")) if args.only else None
+    only = set(filter(None, args.only.split(","))) if args.only else None
 
     run_started = time.time()
     benches = {}
-    from . import bench_quality, bench_localization, bench_scaling, \
-        bench_weak_scaling
+    from . import bench_kernels, bench_quality, bench_localization, \
+        bench_scaling, bench_weak_scaling
 
+    benches["kernels"] = bench_kernels.main          # §IV-C hot path
     benches["quality"] = bench_quality.main          # Table I
     benches["localization"] = bench_localization.main  # Fig 3
     benches["scaling"] = bench_scaling.main          # Fig 4/5
     benches["weak_scaling"] = bench_weak_scaling.main  # Table II
+
+    if only:
+        unknown = only - set(benches)
+        if unknown:
+            # a typo'd --only must not produce a green no-op run (the CI
+            # bench gate depends on the named benches actually running)
+            print(f"unknown bench name(s) {sorted(unknown)}; "
+                  f"valid: {sorted(benches)}", file=sys.stderr)
+            sys.exit(2)
 
     failed = []
     for name, fn in benches.items():
@@ -60,6 +70,14 @@ def main() -> None:
             # a bench emits its record before its acceptance assert, so a
             # fresh record can still belong to a FAILED bench — flag it
             payload["bench_failed"] = name in failed
+            # persist the flags into the per-bench file so a standalone
+            # check_regression (which reads BENCH_<name>.json, not the
+            # combined summary) sees them too
+            record.emit(name, payload.get("rows", []),
+                        derived=payload.get("derived"),
+                        extra={"stale": payload["stale"],
+                               "bench_failed": payload["bench_failed"],
+                               "written_at": payload.get("written_at", 0)})
             derived = payload.get("derived") or {}
             headline = ", ".join(
                 f"{k}={v}" for k, v in sorted(derived.items())

@@ -46,11 +46,11 @@ class IterationStats:
 
 
 def extract_contig_kmers(contigs, alive, *, k: int, capacity: int,
-                         weight: int):
+                         weight: int, backend=None):
     """(k+s)-mer pseudo-count table from a contig set (§II-H)."""
     return kmer_analysis.pseudo_count_table(
         contigs.bases, jnp.where(alive, contigs.lengths, 0),
-        k=k, capacity=capacity, weight=weight,
+        k=k, capacity=capacity, weight=weight, backend=backend,
     )
 
 
@@ -158,6 +158,7 @@ class Assembler:
             mer_sizes=plan.ladder(k_last),
             walk_capacity=plan.walk_capacity,
             max_scaffold_len=plan.max_scaffold_len,
+            backend=plan.kernel_backend,
         )
         return {
             "contigs": contigs,

@@ -113,7 +113,9 @@ class Local(ExecutionContext):
 
     def kmer_set(self, k: int, prev):
         plan = self.plan
-        hi, lo, left, right, valid = kmer_analysis.occurrences(self.reads, k=k)
+        hi, lo, left, right, valid = kmer_analysis.occurrences(
+            self.reads, k=k, backend=plan.kernel_backend
+        )
         if plan.low_memory:
             valid = kmer_analysis.admit_two_sightings(
                 hi, lo, valid, bloom_bits=max(1 << 16, plan.kmer_capacity * 8)
@@ -129,6 +131,7 @@ class Local(ExecutionContext):
                 prev = extract_contig_kmers(
                     contigs, alive, k=k, capacity=plan.kmer_capacity,
                     weight=plan.contig_pseudo_weight,
+                    backend=plan.kernel_backend,
                 )
             tab = kmer_analysis.merge_counts(
                 tab, prev, capacity=plan.kmer_capacity
@@ -142,11 +145,13 @@ class Local(ExecutionContext):
     def align(self, contigs, alive, k: int):
         seed_len = min(k, 27)
         sidx = alignment.build_seed_index(
-            contigs, alive, seed_len=seed_len, capacity=self.plan.seed_cap
+            contigs, alive, seed_len=seed_len, capacity=self.plan.seed_cap,
+            backend=self.plan.kernel_backend,
         )
         return alignment.align_reads(
             self.reads, contigs, sidx, seed_len=seed_len,
             stride=self.plan.seed_stride,
+            backend=self.plan.kernel_backend,
         )
 
     def extend(self, contigs, alive, al, k: int):
@@ -155,6 +160,7 @@ class Local(ExecutionContext):
             mer_sizes=self.plan.ladder(k),
             capacity=self.plan.walk_capacity,
             max_ext=self.plan.max_ext,
+            backend=self.plan.kernel_backend,
         )
         return extended
 
@@ -177,6 +183,7 @@ class Local(ExecutionContext):
             batches, k=k, capacity=plan.kmer_capacity,
             bloom_bits=plan.bloom_slots,
             checkpoint_dir=self._kmer_ckpt_dir(k),
+            backend=plan.kernel_backend,
         )
         if prev is not None:
             from .assembler import extract_contig_kmers
@@ -185,6 +192,7 @@ class Local(ExecutionContext):
             ptab = extract_contig_kmers(
                 contigs, alive, k=k, capacity=plan.kmer_capacity,
                 weight=plan.contig_pseudo_weight,
+                backend=plan.kernel_backend,
             )
             run = kmer_analysis.merge_counts(
                 run, ptab, capacity=plan.kmer_capacity
@@ -200,6 +208,7 @@ class Local(ExecutionContext):
         return alignment.align_reads(
             batch, contigs, sidx, seed_len=seed_len,
             stride=self.plan.seed_stride,
+            backend=self.plan.kernel_backend,
         )
 
 
@@ -283,6 +292,7 @@ class Mesh(ExecutionContext):
             min_count=plan.min_count, policy=plan.policy,
             prev_contigs=prev_contigs,
             contig_weight=plan.contig_pseudo_weight,
+            backend=plan.kernel_backend,
         )
         self._note_overflow("kmer_route", route_ovf)
         self._note_overflow("kmer_table", table_ovf)
@@ -304,11 +314,13 @@ class Mesh(ExecutionContext):
 
         seed_len = min(k, 27)
         sidx = alignment.build_seed_index(
-            contigs, alive, seed_len=seed_len, capacity=self.plan.seed_cap
+            contigs, alive, seed_len=seed_len, capacity=self.plan.seed_cap,
+            backend=self.plan.kernel_backend,
         )
         return stages.sharded_align(
             self.sharded, contigs, sidx, self.mesh,
             seed_len=seed_len, stride=self.plan.seed_stride,
+            backend=self.plan.kernel_backend,
         )
 
     def extend(self, contigs, alive, al, k: int):
@@ -320,6 +332,7 @@ class Mesh(ExecutionContext):
             capacity=self.plan.walk_capacity,
             max_ext=self.plan.max_ext,
             out_factor=self.plan.localize_out_factor,
+            backend=self.plan.kernel_backend,
         )
         self._note_overflow("localize", ovf)
         return extended
@@ -352,6 +365,7 @@ class Mesh(ExecutionContext):
             pre_capacity=plan.pre_cap,
             route_capacity=plan.route_capacity,
             checkpoint_dir=self._kmer_ckpt_dir(k),
+            backend=plan.kernel_backend,
         )
         # ownership is total, so the per-owner slices merge into one
         # key-sorted global table by pure re-sort (cf. gather_ksets) —
@@ -370,6 +384,7 @@ class Mesh(ExecutionContext):
             ptab = extract_contig_kmers(
                 contigs, alive, k=k, capacity=plan.kmer_capacity,
                 weight=plan.contig_pseudo_weight,
+                backend=plan.kernel_backend,
             )
             merged = kmer_analysis.merge_counts(
                 merged, ptab, capacity=plan.kmer_capacity
@@ -394,6 +409,7 @@ class Mesh(ExecutionContext):
         al = stages.sharded_align(
             sharded, contigs, sidx, self.mesh,
             seed_len=seed_len, stride=self.plan.seed_stride,
+            backend=self.plan.kernel_backend,
         )
         B = batch.num_reads
         return jax.tree.map(lambda x: x[:B], al)

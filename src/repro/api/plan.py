@@ -164,6 +164,13 @@ class AssemblyPlan:
     prune_beta: float = 0.5
     # --- alignment ---
     seed_stride: int = 16
+    # --- kernel backend (DESIGN.md §8) ---
+    # "pallas" | "ref" | None (None = the hardware-aware kernels.ops
+    # default — pallas on TPU, ref elsewhere — overridable process-wide
+    # via the REPRO_KERNELS env var).  Selects which implementation serves
+    # the fused k-mer extraction hot path in every stage this plan
+    # drives; both backends are bit-identical.
+    kernel_backend: Optional[str] = None
     # --- local assembly ---
     walk_ladder_step: int = 4
     max_ext: int = 64
@@ -212,6 +219,15 @@ class AssemblyPlan:
         )
         if self.num_shards < 1:
             raise PlanError(f"AssemblyPlan: num_shards={self.num_shards} < 1")
+        if self.kernel_backend is not None:
+            from repro.kernels import ops as kernel_ops
+
+            if self.kernel_backend not in kernel_ops.BACKENDS:
+                raise PlanError(
+                    f"AssemblyPlan: kernel_backend={self.kernel_backend!r} "
+                    f"unknown; valid: {kernel_ops.BACKENDS} (or None for "
+                    f"the default)"
+                )
         for name in ("seed_capacity", "pre_capacity",
                      "shard_table_capacity", "route_capacity"):
             v = getattr(self, name)

@@ -25,6 +25,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 from . import dht, kmer
 from .types import ContigSet, ReadSet
 
@@ -57,14 +59,22 @@ class Alignments(NamedTuple):
 
 
 def build_seed_index(
-    contigs: ContigSet, alive, *, seed_len: int, capacity: int
+    contigs: ContigSet, alive, *, seed_len: int, capacity: int,
+    backend=None,
 ) -> SeedIndex:
-    """Index every unique contig k-mer; multi-occurrence seeds are flagged."""
+    """Index every unique contig k-mer; multi-occurrence seeds are flagged.
+
+    Seed extraction runs through the fused kernel path (`kernels.ops`,
+    DESIGN.md §8): the canonical codes and the strand flip come straight
+    out of the extraction lanes.
+    """
     C, Lmax = contigs.bases.shape
     lengths = jnp.where(alive, contigs.lengths, 0)
-    hi, lo, valid, _, _ = kmer.extract_kmers(contigs.bases, lengths, k=seed_len)
-    chi, clo, flip = kmer.canonical(hi, lo, k=seed_len)
     W = Lmax - seed_len + 1
+    lanes = ops.kmer_extract(contigs.bases, lengths, k=seed_len,
+                             backend=backend)
+    chi, clo = lanes.hi[:, :W], lanes.lo[:, :W]
+    flip, valid = lanes.flip[:, :W], lanes.valid[:, :W]
     cids = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[:, None], (C, W))
     poss = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32)[None, :], (C, W))
     flat = lambda x: x.reshape((-1,))
@@ -107,17 +117,25 @@ def _seed_positions(read_len_max: int, seed_len: int, stride: int):
     return pos
 
 
-@functools.partial(jax.jit, static_argnames=("seed_len", "stride"))
-def _candidates(reads: ReadSet, index: SeedIndex, *, seed_len: int, stride: int):
-    """Per-seed candidate placements [R, S] (contig, cstart, orient)."""
-    hi, lo, valid, _, _ = kmer.extract_kmers(reads.bases, reads.lengths, k=seed_len)
+@functools.partial(jax.jit, static_argnames=("seed_len", "stride", "backend"))
+def _candidates(reads: ReadSet, index: SeedIndex, *, seed_len: int, stride: int,
+                backend=None):
+    """Per-seed candidate placements [R, S] (contig, cstart, orient).
+
+    Read-seed extraction shares the fused kernel path: the [R, W] canonical
+    lanes are computed once and the stride columns selected from them
+    (canonicalization commutes with column selection, so this is
+    bit-identical to canonicalizing the selected forward codes).
+    """
+    lanes = ops.kmer_extract(reads.bases, reads.lengths, k=seed_len,
+                             backend=backend)
     pos_list = _seed_positions(reads.max_len, seed_len, stride)
     S = len(pos_list)
     pcols = jnp.array(pos_list, dtype=jnp.int32)
-    shi = hi[:, pcols]
-    slo = lo[:, pcols]
-    sval = valid[:, pcols]
-    chi, clo, rflip = kmer.canonical(shi, slo, k=seed_len)
+    chi = lanes.hi[:, pcols]
+    clo = lanes.lo[:, pcols]
+    sval = lanes.valid[:, pcols]
+    rflip = lanes.flip[:, pcols]
     slots = dht.lookup(index.table, chi, clo, sval)
     ok = (slots >= 0) & ~index.multi[jnp.clip(slots, 0)]
     cc = jnp.where(ok, index.contig[jnp.clip(slots, 0)], NONE)
@@ -160,7 +178,9 @@ def _verify(reads: ReadSet, contigs: ContigSet, cid, cstart, orient):
     return match.sum(axis=-1), inside.sum(axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("seed_len", "stride", "min_frac"))
+@functools.partial(
+    jax.jit, static_argnames=("seed_len", "stride", "min_frac", "backend")
+)
 def align_reads(
     reads: ReadSet,
     contigs: ContigSet,
@@ -169,8 +189,10 @@ def align_reads(
     seed_len: int,
     stride: int = 16,
     min_frac: float = 0.9,
+    backend=None,
 ) -> Alignments:
-    cc, cstart, orient = _candidates(reads, index, seed_len=seed_len, stride=stride)
+    cc, cstart, orient = _candidates(reads, index, seed_len=seed_len,
+                                     stride=stride, backend=backend)
     R, S = cc.shape
     # vote: support of candidate s = #seeds proposing the same placement
     same = (

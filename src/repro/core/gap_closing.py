@@ -113,13 +113,14 @@ def close_and_render(
     max_walk: int = 64,
     max_scaffold_len: int = 1 << 13,
     max_n_run: int = 64,
+    backend=None,
 ) -> ScaffoldSeqs:
     """Close gaps where possible, then render scaffold sequences."""
     tag_bits = min(16, 62 - 2 * max(mer_sizes))
     read_contig = local_assembly.localize_reads(reads, aln_contig)
     wt = local_assembly.build_walk_tables(
         reads, read_contig, mer_sizes=mer_sizes, tag_bits=tag_bits,
-        capacity=walk_capacity,
+        capacity=walk_capacity, backend=backend,
     )
     return close_and_render_with_tables(
         scaffs, contigs, wt, seed_len=seed_len, mer_sizes=mer_sizes,

@@ -22,7 +22,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import bloom, kmer
+from repro.kernels import ops
+
+from . import bloom
 from .types import EMPTY_HI, EXT_F, EXT_X, KmerSet, ReadSet
 
 
@@ -40,19 +42,26 @@ class ExtensionPolicy(NamedTuple):
     err_rate: float = 0.05
 
 
-def occurrences(reads: ReadSet, *, k: int):
+def occurrences(reads: ReadSet, *, k: int, backend=None):
     """Flat canonical k-mer occurrences of a read batch.
+
+    One fused `kernels.ops.kmer_extract` invocation per read tile produces
+    the canonical codes, the canonicalized extension bases, and the
+    validity mask together (DESIGN.md §8) — this is the system's ONE
+    extraction path; `backend` selects pallas/ref per the plan or the
+    REPRO_KERNELS override.
 
     Returns (hi, lo, left, right, valid), each [R * (L-k+1)].
     """
-    hi, lo, valid, left, right = kmer.extract_kmers(reads.bases, reads.lengths, k=k)
-    chi, clo, cleft, cright, _ = kmer.canonicalize_occurrences(hi, lo, left, right, k=k)
-    flat = lambda x: x.reshape((-1,))
-    return flat(chi), flat(clo), flat(cleft), flat(cright), flat(valid)
+    lanes = ops.kmer_extract(reads.bases, reads.lengths, k=k, backend=backend)
+    W = reads.bases.shape[1] - k + 1
+    flat = lambda x: x[:, :W].reshape((-1,))
+    return (flat(lanes.hi), flat(lanes.lo), flat(lanes.left),
+            flat(lanes.right), flat(lanes.valid))
 
 
 def pseudo_count_table(bases, lengths, *, k: int, capacity: int,
-                       weight: int) -> dict:
+                       weight: int, backend=None) -> dict:
     """Pseudo-counted k-mer table from dense sequence rows (§II-H).
 
     The cross-iteration evidence carrier: contig (k+s)-mers enter the next
@@ -65,7 +74,7 @@ def pseudo_count_table(bases, lengths, *, k: int, capacity: int,
         bases=bases, lengths=lengths,
         mate=jnp.full(lengths.shape, -1, jnp.int32), insert_size=0,
     )
-    hi, lo, left, right, valid = occurrences(seqs, k=k)
+    hi, lo, left, right, valid = occurrences(seqs, k=k, backend=backend)
     tab = count_occurrences(hi, lo, left, right, valid, capacity=capacity)
     w = jnp.int32(weight)
     return {
@@ -291,6 +300,7 @@ def analyze(
     policy: ExtensionPolicy = ExtensionPolicy(),
     low_memory: bool = False,
     bloom_bits: int = 1 << 16,
+    backend=None,
 ) -> KmerSet:
     """Full single-shard k-mer analysis: occurrences -> counted KmerSet.
 
@@ -299,7 +309,7 @@ def analyze(
     can be provisioned for the true (multi-occurrence) k-mer population
     rather than the error-singleton-dominated raw population.
     """
-    hi, lo, left, right, valid = occurrences(reads, k=k)
+    hi, lo, left, right, valid = occurrences(reads, k=k, backend=backend)
     if low_memory:
         valid = admit_two_sightings(hi, lo, valid, bloom_bits=bloom_bits)
     tab = count_occurrences(hi, lo, left, right, valid, capacity=capacity)

@@ -28,6 +28,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 from . import dht, kmer
 from .types import ContigSet, ReadSet
 
@@ -57,19 +59,18 @@ def localize_reads(reads: ReadSet, aln_contig):
     return jnp.where(own >= 0, own, mate)
 
 
-def _count_tagged(hi, lo, left, right, valid, tag, *, m: int, tag_bits: int,
-                  table: dht.HashTable, lh, rh):
-    """Canonicalize, tag, and histogram (contig,mer) occurrences into a DHT.
+def _count_tagged(chi, clo, cleft, cright, valid, tag, *, m: int,
+                  tag_bits: int, table: dht.HashTable, lh, rh):
+    """Tag and histogram canonical (contig,mer) occurrences into a DHT.
 
-    Inserts into the given table and accumulates onto the given histograms,
-    so repeated calls fold successive occurrence batches into one persistent
-    table (the streaming ingest path, DESIGN.md §7).  `dht.insert` dedupes
-    against existing entries, and histogram updates are scatter-adds at the
-    returned slots, so the result is batch-split independent.
+    Inputs are the already-canonical lanes from the fused extraction kernel
+    (`kernels.ops.kmer_extract`, DESIGN.md §8).  Inserts into the given
+    table and accumulates onto the given histograms, so repeated calls fold
+    successive occurrence batches into one persistent table (the streaming
+    ingest path, DESIGN.md §7).  `dht.insert` dedupes against existing
+    entries, and histogram updates are scatter-adds at the returned slots,
+    so the result is batch-split independent.
     """
-    chi, clo, cleft, cright, _ = kmer.canonicalize_occurrences(
-        hi, lo, left, right, k=m
-    )
     thi, tlo = kmer.embed_tag(chi, clo, tag, k=m, tag_bits=tag_bits)
     table, slots = dht.insert(table, thi, tlo, valid)
     cap = table.capacity
@@ -97,25 +98,28 @@ def accumulate_walk_tables(
     *,
     mer_sizes: tuple,
     tag_bits: int,
+    backend=None,
 ) -> WalkTables:
     """Fold one read batch's (contig, mer) occurrences into `wt`.
 
     The out-of-core half of `build_walk_tables`: batches stream through
     here one at a time, so the device never holds more than one batch of
     read state while the (fixed-capacity) tables accumulate the evidence
-    of the whole dataset.
+    of the whole dataset.  Per-rung extraction runs through the fused
+    kernel path (`kernels.ops`), which emits the canonical codes and
+    canonicalized extensions in one pass.
     """
     tables, lhs, rhs = [], [], []
     for rung, m in enumerate(mer_sizes):
-        hi, lo, valid, left, right = kmer.extract_kmers(
-            reads.bases, reads.lengths, k=m
-        )
-        W = hi.shape[1]
+        lanes = ops.kmer_extract(reads.bases, reads.lengths, k=m,
+                                 backend=backend)
+        W = reads.max_len - m + 1
         tag = jnp.broadcast_to(read_contig[:, None], (reads.num_reads, W))
-        v = valid & (read_contig[:, None] >= 0)
+        v = lanes.valid[:, :W] & (read_contig[:, None] >= 0)
         flat = lambda x: x.reshape((-1,))
         t, lh, rh = _count_tagged(
-            flat(hi), flat(lo), flat(left), flat(right), flat(v),
+            flat(lanes.hi[:, :W]), flat(lanes.lo[:, :W]),
+            flat(lanes.left[:, :W]), flat(lanes.right[:, :W]), flat(v),
             flat(tag), m=m, tag_bits=tag_bits,
             table=wt.tables[rung], lh=wt.left_hist[rung],
             rh=wt.right_hist[rung],
@@ -135,10 +139,12 @@ def build_walk_tables(
     mer_sizes: tuple,
     tag_bits: int,
     capacity: int,
+    backend=None,
 ) -> WalkTables:
     return accumulate_walk_tables(
         empty_walk_tables(mer_sizes=mer_sizes, capacity=capacity),
         reads, read_contig, mer_sizes=mer_sizes, tag_bits=tag_bits,
+        backend=backend,
     )
 
 
@@ -378,6 +384,7 @@ def extend_contigs(
     capacity: int = 1 << 16,
     max_ext: int = 64,
     min_len: int | None = None,
+    backend=None,
 ):
     """Full §II-G stage: localize -> tables -> walk both ends -> graft."""
     C = contigs.capacity
@@ -388,7 +395,7 @@ def extend_contigs(
     read_contig = localize_reads(reads, aln_contig)
     wt = build_walk_tables(
         reads, read_contig, mer_sizes=mer_sizes, tag_bits=tag_bits,
-        capacity=capacity,
+        capacity=capacity, backend=backend,
     )
     return extend_with_tables(
         wt, contigs, alive, mer_sizes=mer_sizes, max_ext=max_ext,

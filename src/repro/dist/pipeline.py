@@ -26,9 +26,10 @@ from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
-from repro.core import kmer, kmer_analysis
+from repro.core import kmer_analysis
 from repro.core.kmer_analysis import ExtensionPolicy
 from repro.core.types import INVALID_BASE, KmerSet
+from repro.kernels import ops
 from repro.launch import mesh as mesh_lib
 
 AXIS = "data"
@@ -108,8 +109,13 @@ def kmer_owner(hi, lo, num_shards: int):
     congruent to s and probe chains would grow ~S-fold.  Tables stay
     decorrelated up to 2**16 slots — revisit if per-shard dht capacity
     ever exceeds that.
+
+    The hash is `kernels.ops.kmer_hash` — the same murmur3-fmix avalanche
+    the extraction kernel emits in its `hash` lane, so owner assignment is
+    identical whether it comes from the per-occurrence kernel lane or this
+    table-row-scale re-hash (DESIGN.md §8).
     """
-    h = kmer.kmer_hash(hi, lo)
+    h = ops.kmer_hash(hi, lo)
     return ((h >> jnp.uint32(16)) % jnp.uint32(num_shards)).astype(jnp.int32)
 
 

@@ -70,6 +70,7 @@ def sharded_kmer_analysis(
     policy: ExtensionPolicy = ExtensionPolicy(),
     prev_contigs=None,
     contig_weight: int = 4,
+    backend=None,
 ):
     """Alg. 2 with optional §II-H contig-kmer injection.
 
@@ -109,7 +110,9 @@ def sharded_kmer_analysis(
             bases=bases, lengths=lengths,
             mate=jnp.full(lengths.shape, -1, jnp.int32), insert_size=0,
         )
-        hi, lo, left, right, valid = kmer_analysis.occurrences(local, k=k)
+        hi, lo, left, right, valid = kmer_analysis.occurrences(
+            local, k=k, backend=backend
+        )
         pre = kmer_analysis.count_occurrences(
             hi, lo, left, right, valid, capacity=pre_capacity
         )
@@ -119,6 +122,7 @@ def sharded_kmer_analysis(
             cb, cl = contig_block
             ctab = kmer_analysis.pseudo_count_table(
                 cb, cl, k=k, capacity=pre_capacity, weight=contig_weight,
+                backend=backend,
             )
             streams.append(ctab)
             local_ovf = local_ovf + ctab["overflow"].astype(jnp.int32)
@@ -172,6 +176,7 @@ def sharded_bloom_observe(
     pre_capacity: int,
     route_capacity: Optional[int] = None,
     num_hashes: int = 3,
+    backend=None,
 ):
     """Pass 1 of the streamed two-sighting rule for ONE batch.
 
@@ -199,7 +204,9 @@ def sharded_bloom_observe(
             bases=bases, lengths=lengths,
             mate=jnp.full(lengths.shape, -1, jnp.int32), insert_size=0,
         )
-        hi, lo, left, right, valid = kmer_analysis.occurrences(local, k=k)
+        hi, lo, left, right, valid = kmer_analysis.occurrences(
+            local, k=k, backend=backend
+        )
         pre = kmer_analysis.count_occurrences(
             hi, lo, left, right, valid, capacity=pre_capacity
         )
@@ -247,6 +254,7 @@ def sharded_stream_fold(
     pre_capacity: int,
     route_capacity: Optional[int] = None,
     num_hashes: int = 3,
+    backend=None,
 ):
     """Pass 2 for ONE batch: admit at the owner, fold into the running table.
 
@@ -273,7 +281,9 @@ def sharded_stream_fold(
             bases=bases, lengths=lengths,
             mate=jnp.full(lengths.shape, -1, jnp.int32), insert_size=0,
         )
-        hi, lo, left, right, valid = kmer_analysis.occurrences(local, k=k)
+        hi, lo, left, right, valid = kmer_analysis.occurrences(
+            local, k=k, backend=backend
+        )
         pre = kmer_analysis.count_occurrences(
             hi, lo, left, right, valid, capacity=pre_capacity
         )
@@ -337,6 +347,7 @@ def sharded_align(
     *,
     seed_len: int,
     stride: int = 16,
+    backend=None,
 ):
     """Align every read to the live contigs, one shard per read block.
 
@@ -364,7 +375,8 @@ def sharded_align(
         )
         reps = ContigSet(bases=cbases, lengths=clens, depths=cdepths)
         return alignment.align_reads(
-            local, reps, idx, seed_len=seed_len, stride=stride
+            local, reps, idx, seed_len=seed_len, stride=stride,
+            backend=backend,
         )
 
     fn = shard_map(
@@ -466,6 +478,7 @@ def sharded_extend(
     capacity: int,
     max_ext: int = 64,
     out_factor: int = 2,
+    backend=None,
 ):
     """Localize reads to their contig's owner, mer-walk owned contig ends.
 
@@ -504,6 +517,7 @@ def sharded_extend(
         ext, _walk = local_assembly.extend_contigs(
             local, reps, calive & owned, eff_c,
             mer_sizes=mer_sizes, capacity=capacity, max_ext=max_ext,
+            backend=backend,
         )
         return ext.bases, ext.lengths, ext.depths
 

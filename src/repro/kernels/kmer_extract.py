@@ -3,12 +3,21 @@
 K-mer analysis touches every input byte and dominates the paper's
 weak-scaling profile (§IV-C Table II): for each read window it must
 2-bit-pack the k bases, compute the reverse complement, take the
-lexicographic min (canonical form), and hash it for owner routing.  Done
-naively, the intermediates ([R, W] packed codes, RC codes, flip masks) round
--trip through HBM between ops.  This kernel keeps the whole rolling
-pipeline in VMEM/VREGs: one pass over a [BR, L] read tile produces the
-canonical (hi, lo) lanes, the owner hash, and the validity mask, all
-blocked to the same [BR, L] tile so reads stream through HBM exactly once.
+lexicographic min (canonical form), canonicalize the extension bases, and
+hash it for owner routing.  Done naively, the intermediates ([R, W] packed
+codes, RC codes, flip masks, extension lanes) round-trip through HBM
+between ops.  This kernel keeps the whole rolling pipeline in VMEM/VREGs:
+one pass over a [BR, L] read tile produces every lane the system consumes —
+
+  hi / lo      canonical dual-lane codes (k-mer analysis, seed index)
+  hash         owner-routing avalanche hash (distributed exchange, Bloom)
+  left / right canonicalized extension bases (§II-B extension histograms)
+  flip         whether canonical == reverse complement (alignment strand)
+  valid        window inside the read, no N bases
+
+so reads stream through HBM exactly once per (k, tile).  `kernels.ops`
+fronts this kernel with the backend dispatch (DESIGN.md §8); everything in
+core/, stream/, and dist/ extracts through that one path.
 
 Integer-only VPU work: the dual-lane uint32 packing (DESIGN.md §2) exists
 precisely because this kernel targets the 32-bit VPU datapath — a uint64
@@ -21,12 +30,34 @@ every ref shares one tiling.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK_READS = 8
+_INVALID = 4  # types.INVALID_BASE (kept literal: kernel modules stay leaf)
+
+
+class KmerLanes(NamedTuple):
+    """Per-window output lanes, each [R, L] (last k-1 columns invalid).
+
+    The one extraction record every consumer shares: canonical codes for
+    counting/indexing, the owner hash for routing, canonicalized extension
+    bases for the §II-B histograms, the strand flip for alignment, and the
+    validity mask.  Lanes at ~valid positions are unspecified — consumers
+    must mask (they all do; count tables key on EMPTY, DHT inserts gate on
+    valid).
+    """
+
+    hi: jnp.ndarray     # [R, L] uint32 canonical code, high lane
+    lo: jnp.ndarray     # [R, L] uint32 canonical code, low lane
+    hash: jnp.ndarray   # [R, L] uint32 owner hash of the canonical code
+    left: jnp.ndarray   # [R, L] uint8 canonicalized left extension (4 absent)
+    right: jnp.ndarray  # [R, L] uint8 canonicalized right extension
+    flip: jnp.ndarray   # [R, L] bool canonical form is the reverse complement
+    valid: jnp.ndarray  # [R, L] bool window inside read, no N bases
 
 
 def _mix32(x):
@@ -45,7 +76,13 @@ def _rev32_2bit(x):
     return (x << 16) | (x >> 16)
 
 
-def _kernel(bases_ref, lengths_ref, hi_ref, lo_ref, hash_ref, valid_ref, *, k: int):
+def _complement(b):
+    """3 - b for real bases; N / pad stays put (mirrors kmer.complement_base)."""
+    return jnp.where(b < 4, (3 - b).astype(b.dtype), b)
+
+
+def _kernel(bases_ref, lengths_ref, hi_ref, lo_ref, hash_ref, left_ref,
+            right_ref, flip_ref, valid_ref, *, k: int):
     b = bases_ref[...]  # [BR, L] uint8
     lengths = lengths_ref[...]  # [BR]
     BR, L = b.shape
@@ -90,44 +127,65 @@ def _kernel(bases_ref, lengths_ref, hi_ref, lo_ref, hash_ref, valid_ref, *, k: i
     no_n = (csum[:, k : k + W] - csum[:, :W]) == 0
     pos = jax.lax.broadcasted_iota(jnp.int32, (BR, W), 1)
     valid = no_n & (pos + k <= lengths[:, None])
+    # extensions: the base just before / just after each window, swapped and
+    # complemented when the canonical form is the reverse complement
+    absent = jnp.uint8(_INVALID)
+    left_f = jnp.concatenate(
+        [jnp.full((BR, 1), absent, jnp.uint8), b[:, : W - 1]], axis=1
+    )
+    right_f = jnp.concatenate(
+        [b[:, k:], jnp.full((BR, 1), absent, jnp.uint8)], axis=1
+    )
+    right_f = jnp.where(pos + k < lengths[:, None], right_f, absent)
+    left_f = jnp.where(pos > 0, left_f, absent)
+    c_left = jnp.where(flip, _complement(right_f), left_f)
+    c_right = jnp.where(flip, _complement(left_f), right_f)
     # pad W -> L so outputs share the input tile shape
     pad = ((0, 0), (0, k - 1))
     hi_ref[...] = jnp.pad(c_hi, pad)
     lo_ref[...] = jnp.pad(c_lo, pad)
     hash_ref[...] = jnp.pad(h, pad)
+    left_ref[...] = jnp.pad(c_left, pad, constant_values=_INVALID)
+    right_ref[...] = jnp.pad(c_right, pad, constant_values=_INVALID)
+    flip_ref[...] = jnp.pad(flip, pad)
     valid_ref[...] = jnp.pad(valid, pad)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret", "block_reads"))
 def kmer_extract(
     bases, lengths, *, k: int, interpret: bool = True, block_reads: int = BLOCK_READS
-):
-    """Canonical k-mer codes + owner hash for a dense read batch.
+) -> KmerLanes:
+    """Every k-mer lane of a dense read batch in one fused pass.
 
     Args:
       bases:   [R, L] uint8 (R divisible by block_reads).
       lengths: [R] int32.
     Returns:
-      (hi, lo, hash, valid), each [R, L] with the last k-1 columns invalid.
+      KmerLanes, each [R, L] with the last k-1 columns invalid.
     """
     R, L = bases.shape
     assert R % block_reads == 0, f"R={R} not divisible by {block_reads}"
+    assert L >= k, f"reads narrower than k: L={L} k={k}"
     grid = (R // block_reads,)
     out_shape = [
-        jax.ShapeDtypeStruct((R, L), jnp.uint32),
-        jax.ShapeDtypeStruct((R, L), jnp.uint32),
-        jax.ShapeDtypeStruct((R, L), jnp.uint32),
-        jax.ShapeDtypeStruct((R, L), jnp.bool_),
+        jax.ShapeDtypeStruct((R, L), jnp.uint32),   # hi
+        jax.ShapeDtypeStruct((R, L), jnp.uint32),   # lo
+        jax.ShapeDtypeStruct((R, L), jnp.uint32),   # hash
+        jax.ShapeDtypeStruct((R, L), jnp.uint8),    # left
+        jax.ShapeDtypeStruct((R, L), jnp.uint8),    # right
+        jax.ShapeDtypeStruct((R, L), jnp.bool_),    # flip
+        jax.ShapeDtypeStruct((R, L), jnp.bool_),    # valid
     ]
     tile = lambda: pl.BlockSpec((block_reads, L), lambda i: (i, 0))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, k=k),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_reads, L), lambda i: (i, 0)),
             pl.BlockSpec((block_reads,), lambda i: (i,)),
         ],
-        out_specs=[tile(), tile(), tile(), tile()],
+        out_specs=[tile() for _ in range(7)],
         out_shape=out_shape,
         interpret=interpret,
     )(bases, lengths)
+    return KmerLanes(*out)

@@ -1,47 +1,159 @@
-"""Public jit'd entry points for the Pallas kernels.
+"""Kernel backend dispatch: the one entry point for every fused hot path.
 
-Each op dispatches to the Pallas kernel (interpret=True on CPU — the
-container has no TPU; the kernel body still executes exactly) and exposes
-the pure-jnp oracle alongside for validation and fallback.  On a real TPU
-runtime `interpret` flips to False with no other change.
+Every compute hot-spot with a Pallas kernel is fronted here by a *backend*
+choice (DESIGN.md §8):
+
+  * ``"pallas"`` — the fused kernel.  On TPU it compiles natively; on any
+    other backend it runs in interpret mode (the kernel body still executes
+    exactly, op for op), so the same call sites work everywhere.
+  * ``"ref"``    — the pure-jnp oracle in `kernels.ref`, kept bit-identical
+    (for integer kernels) or numerically validated (for float kernels).
+
+Selection order, strongest first:
+
+  1. the ``REPRO_KERNELS`` environment variable (operator override — flips
+     the whole process without touching plans or code);
+  2. the explicit ``backend=`` argument (plumbed from
+     ``AssemblyPlan.kernel_backend`` through the execution contexts);
+  3. the hardware-aware default (`default_backend`): ``"pallas"`` on TPU,
+     ``"ref"`` elsewhere — the backends are bit-identical, and off-TPU the
+     kernel only runs through the interpreter.
+
+The k-mer extraction path (`kmer_extract`) is THE system hot path: all
+extraction/canonicalization/hashing in core/, stream/, and dist/ goes
+through this module — call `kernels.kmer_extract` nowhere else.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import kmer_extract as _ke
 from . import ref
 from . import ssd_scan as _ssd
 from . import sw_extend as _sw
+from .kmer_extract import BLOCK_READS, KmerLanes  # re-export  # noqa: F401
+
+BACKENDS = ("pallas", "ref")
+ENV_VAR = "REPRO_KERNELS"
+
+
+def default_backend() -> str:
+    """Hardware-aware default: the fused kernel where it compiles natively.
+
+    On TPU the Pallas kernel is the point of this package; on every other
+    backend it would run through the interpreter — same bits, pure
+    overhead (~1.5x, measured by benchmarks/bench_kernels.py) — so the
+    bit-identical jnp ref serves the default there.  Force `pallas` via
+    REPRO_KERNELS or `AssemblyPlan.kernel_backend` to exercise the kernel
+    path off-TPU (CI's parity tests and the kernels bench do exactly
+    that).
+    """
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def resolve_backend(backend=None) -> str:
+    """Resolve a kernel backend name: env override > explicit > default.
+
+    The env var is read per call, but call sites that dispatch INSIDE a
+    jitted stage (e.g. `alignment.align_reads`, where `backend` is a
+    static argument) bake the resolved choice into the compiled program —
+    set REPRO_KERNELS before the first run of a process, not between
+    runs, if you want it to govern every stage.
+    """
+    env = os.environ.get(ENV_VAR)
+    if env:
+        env = env.strip().lower()
+        if env not in BACKENDS:
+            raise ValueError(
+                f"{ENV_VAR}={env!r} is not a kernel backend; valid: {BACKENDS}"
+            )
+        return env
+    if backend is None:
+        return default_backend()
+    b = str(backend).lower()
+    if b not in BACKENDS:
+        raise ValueError(
+            f"kernel backend {backend!r} unknown; valid: {BACKENDS} "
+            f"(or None for the default)"
+        )
+    return b
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def kmer_extract(bases, lengths, *, k: int, use_kernel: bool = True):
-    if use_kernel:
-        return _ke.kmer_extract(bases, lengths, k=k, interpret=_interpret())
-    return ref.kmer_extract_ref(bases, lengths, k=k)
+def _legacy(use_kernel, backend):
+    """Map the historical use_kernel flag onto the backend argument."""
+    if use_kernel is None:
+        return backend
+    return "pallas" if use_kernel else "ref"
 
 
-def sw_extend(query, target, qlen, tlen, *, band: int = 15, use_kernel: bool = True,
-              **kw):
-    if use_kernel:
+def kmer_extract(bases, lengths, *, k: int, backend=None,
+                 use_kernel=None) -> KmerLanes:
+    """Fused k-mer lanes for a dense [R, L] read batch (any R).
+
+    The single extraction path of the system: canonical (hi, lo) codes,
+    owner hash, canonicalized left/right extension bases, strand flip, and
+    validity come from one kernel invocation per read tile.  Rows are
+    padded to the kernel's BLOCK_READS tiling internally and trimmed back,
+    so callers never see the tile constraint.
+    """
+    b = resolve_backend(_legacy(use_kernel, backend))
+    if b == "ref":
+        return ref.kmer_extract_ref(bases, lengths, k=k)
+    R, L = bases.shape
+    pad = (-R) % BLOCK_READS
+    if pad:
+        bases = jnp.concatenate(
+            [bases, jnp.full((pad, L), 4, bases.dtype)]
+        )
+        lengths = jnp.concatenate(
+            [lengths, jnp.zeros((pad,), lengths.dtype)]
+        )
+    lanes = _ke.kmer_extract(bases, lengths, k=k, interpret=_interpret())
+    if pad:
+        lanes = KmerLanes(*(x[:R] for x in lanes))
+    return lanes
+
+
+def kmer_hash(hi, lo):
+    """Owner-routing hash of packed canonical codes.
+
+    Backend-invariant by construction: per-occurrence hashes come out of
+    the extraction kernel's `hash` lane; this jnp path exists for the
+    table-row scale re-hash (owner routing of pre-combined count tables,
+    DESIGN.md §8) where a kernel launch would cost more than the math.
+    Both are the same murmur3-fmix construction, asserted equal in
+    tests/test_kernel_parity.py.
+    """
+    from repro.core import kmer as _kmer
+
+    return _kmer.kmer_hash(hi, lo)
+
+
+def sw_extend(query, target, qlen, tlen, *, band: int = 15, backend=None,
+              use_kernel=None, **kw):
+    if resolve_backend(_legacy(use_kernel, backend)) == "pallas":
         return _sw.sw_extend(query, target, qlen, tlen, band=band,
                              interpret=_interpret(), **kw)
     return ref.sw_extend_ref(query, target, qlen, tlen, band=band, **kw)
 
 
-def flash_attention(q, k, v, *, causal: bool = True, use_kernel: bool = True, **kw):
-    if use_kernel:
+def flash_attention(q, k, v, *, causal: bool = True, backend=None,
+                    use_kernel=None, **kw):
+    if resolve_backend(_legacy(use_kernel, backend)) == "pallas":
         return _fa.flash_attention(q, k, v, causal=causal,
                                    interpret=_interpret(), **kw)
     return ref.flash_attention_ref(q, k, v, causal=causal)
 
 
-def ssd_scan(x, a, b, c, *, chunk: int = 128, use_kernel: bool = True):
-    if use_kernel:
+def ssd_scan(x, a, b, c, *, chunk: int = 128, backend=None, use_kernel=None):
+    if resolve_backend(_legacy(use_kernel, backend)) == "pallas":
         return _ssd.ssd_scan(x, a, b, c, chunk=chunk, interpret=_interpret())
     return ref.ssd_scan_ref(x, a, b, c)

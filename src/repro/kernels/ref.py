@@ -12,21 +12,35 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kmer
+from repro.core.types import INVALID_BASE
+
+from .kmer_extract import KmerLanes
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def kmer_extract_ref(bases, lengths, *, k: int):
-    """Oracle for kernels.kmer_extract (padded to [R, L])."""
-    R, L = bases.shape
-    hi, lo, valid, _, _ = kmer.extract_kmers(bases, lengths, k=k)
-    chi, clo, _ = kmer.canonical(hi, lo, k=k)
+def kmer_extract_ref(bases, lengths, *, k: int) -> KmerLanes:
+    """Oracle for kernels.kmer_extract (padded to [R, L]).
+
+    Built from the independently-tested `core.kmer` codec, and kept
+    BIT-identical to the Pallas kernel on every valid window — the `ref`
+    backend of `kernels.ops` serves this directly, so backend parity is a
+    pipeline-level guarantee, not just a kernel test
+    (tests/test_kernel_parity.py).
+    """
+    hi, lo, valid, left, right = kmer.extract_kmers(bases, lengths, k=k)
+    chi, clo, cleft, cright, flip = kmer.canonicalize_occurrences(
+        hi, lo, left, right, k=k
+    )
     h = kmer.kmer_hash(chi, clo)
     pad = ((0, 0), (0, k - 1))
-    return (
-        jnp.pad(chi, pad),
-        jnp.pad(clo, pad),
-        jnp.pad(h, pad),
-        jnp.pad(valid, pad),
+    return KmerLanes(
+        hi=jnp.pad(chi, pad),
+        lo=jnp.pad(clo, pad),
+        hash=jnp.pad(h, pad),
+        left=jnp.pad(cleft, pad, constant_values=INVALID_BASE),
+        right=jnp.pad(cright, pad, constant_values=INVALID_BASE),
+        flip=jnp.pad(flip, pad),
+        valid=jnp.pad(valid, pad),
     )
 
 

@@ -181,6 +181,7 @@ def streaming_kmer_analysis(
     num_hashes: int = 3,
     batch_capacity: Optional[int] = None,
     checkpoint_dir: Optional[str] = None,
+    backend=None,
 ):
     """Single-device two-pass streamed count table.
 
@@ -221,12 +222,16 @@ def streaming_kmer_analysis(
 
     def pass1_step(batch):
         nonlocal f1, f2
-        hi, lo, _, _, valid = kmer_analysis.occurrences(batch, k=k)
+        hi, lo, _, _, valid = kmer_analysis.occurrences(
+            batch, k=k, backend=backend
+        )
         f1, f2 = kmer_analysis.bloom_observe(f1, f2, hi, lo, valid)
 
     def pass2_step(batch):
         nonlocal run
-        hi, lo, left, right, valid = kmer_analysis.occurrences(batch, k=k)
+        hi, lo, left, right, valid = kmer_analysis.occurrences(
+            batch, k=k, backend=backend
+        )
         admitted = kmer_analysis.bloom_admit(f2, hi, lo, valid)
         stats.occurrences_total += int(valid.sum())
         stats.occurrences_admitted += int(admitted.sum())
@@ -260,6 +265,7 @@ def sharded_streaming_kmer_analysis(
     route_capacity: Optional[int] = None,
     num_hashes: int = 3,
     checkpoint_dir: Optional[str] = None,
+    backend=None,
 ):
     """Owner-partitioned two-pass streamed count table over a mesh.
 
@@ -310,7 +316,7 @@ def sharded_streaming_kmer_analysis(
         f1_bits, f2_bits, route_ovf, pre_ovf = stages.sharded_bloom_observe(
             batch, mesh, f1_bits, f2_bits, k=k,
             pre_capacity=pre_capacity, route_capacity=route_capacity,
-            num_hashes=num_hashes,
+            num_hashes=num_hashes, backend=backend,
         )
         stats.route_overflow += int(route_ovf)
         stats.table_overflow += int(pre_ovf)
@@ -320,7 +326,7 @@ def sharded_streaming_kmer_analysis(
         run, counts, route_ovf, table_ovf = stages.sharded_stream_fold(
             batch, mesh, f2_bits, run, k=k, capacity=capacity,
             pre_capacity=pre_capacity, route_capacity=route_capacity,
-            num_hashes=num_hashes,
+            num_hashes=num_hashes, backend=backend,
         )
         stats.occurrences_total += int(counts[0])
         stats.occurrences_admitted += int(counts[1])

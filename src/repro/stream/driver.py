@@ -47,7 +47,7 @@ def _concat_alignments(parts):
 
 def _align_and_tables(ctx, batches, contigs, sidx, seed_len, *,
                       wt=None, mer_sizes=None, tag_bits=None,
-                      witnesses=None, clens=None):
+                      witnesses=None, clens=None, backend=None):
     """One pass over the batches: align each, optionally fold walk tables
     and link witnesses.  Returns (alignments, wt, witness arrays, counts)."""
     parts = []
@@ -63,7 +63,8 @@ def _align_and_tables(ctx, batches, contigs, sidx, seed_len, *,
         if wt is not None:
             rc = local_assembly.localize_reads(batch, aln0)
             wt = local_assembly.accumulate_walk_tables(
-                wt, batch, rc, mer_sizes=mer_sizes, tag_bits=tag_bits
+                wt, batch, rc, mer_sizes=mer_sizes, tag_bits=tag_bits,
+                backend=backend,
             )
         if witnesses is not None:
             wit.append(scaffolding.candidate_links(al_b, batch, clens))
@@ -105,7 +106,8 @@ def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
         contigs, alive, trav, bub, prn = contig_stage(kset, k, plan)
         seed_len = min(k, 27)
         sidx = alignment.build_seed_index(
-            contigs, alive, seed_len=seed_len, capacity=plan.seed_cap
+            contigs, alive, seed_len=seed_len, capacity=plan.seed_cap,
+            backend=plan.kernel_backend,
         )
         wt = None
         mer_sizes = tag_bits = None
@@ -118,6 +120,7 @@ def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
         al, wt, _, (aligned, valid_rows) = _align_and_tables(
             ctx, batches, contigs, sidx, seed_len,
             wt=wt, mer_sizes=mer_sizes, tag_bits=tag_bits,
+            backend=plan.kernel_backend,
         )
         if insert_size is None:
             for batch in batches:
@@ -150,7 +153,8 @@ def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
     k_last = plan.ks()[-1]
     seed_len = min(k_last, 27)
     sidx = alignment.build_seed_index(
-        contigs, alive, seed_len=seed_len, capacity=plan.seed_cap
+        contigs, alive, seed_len=seed_len, capacity=plan.seed_cap,
+        backend=plan.kernel_backend,
     )
     gap_mers = plan.ladder(k_last)
     gap_tag_bits = min(16, 62 - 2 * max(gap_mers))
@@ -161,7 +165,7 @@ def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
     al, wt_gap, cands, _ = _align_and_tables(
         ctx, batches, contigs, sidx, seed_len,
         wt=wt_gap, mer_sizes=gap_mers, tag_bits=gap_tag_bits,
-        witnesses=True, clens=clens,
+        witnesses=True, clens=clens, backend=plan.kernel_backend,
     )
     ea, eb, gap, valid, is_splint = cands
     links = scaffolding.links_from_candidates(

@@ -195,6 +195,63 @@ def test_mesh_assemble_matches_local():
     )
 
 
+def test_mesh_backend_parity():
+    """Kernel backend parity under the Mesh(8) owner exchange (DESIGN.md §8).
+
+    Two layers, both bit-exact:
+      * sharded k-mer analysis — canonical keys, counts, extension
+        histograms, and per-shard owner placement identical whether the
+        shard bodies extract through the Pallas kernel or the jnp ref
+        (owner placement compares the FULL flat [S * cap] layout, so a
+        key landing on a different shard would fail even with equal
+        global multisets);
+      * the full Mesh(8) `assemble` — identical scaffolds.
+    Combined with the Local twins in tests/test_kernel_parity.py, every
+    (context, backend) pair produces one answer."""
+    run_devices_script(
+        """
+        import dataclasses
+        from repro.api import Assembler, AssemblyPlan, Mesh
+        from repro.data import mgsim
+        from repro.dist import pipeline as dist, stages
+
+        comm = mgsim.sample_community(5, num_genomes=3, genome_len=300,
+                                      abundance_sigma=0.3)
+        reads, _ = mgsim.generate_reads(6, comm, num_pairs=400, read_len=60,
+                                        err_rate=0.003)
+        mesh = dist.data_mesh(8)
+        ksets = {}
+        for backend in ("pallas", "ref"):
+            kset, route_ovf, tab_ovf = stages.sharded_kmer_analysis(
+                dist.shard_reads(reads, 8), mesh, k=21,
+                pre_capacity=1 << 14, capacity=1 << 14, backend=backend)
+            assert int(route_ovf) == 0 and int(tab_ovf) == 0
+            ksets[backend] = kset
+        for a, b in zip(jax.tree.leaves(ksets["pallas"]),
+                        jax.tree.leaves(ksets["ref"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("MESH KSET PARITY OK")
+
+        plan = AssemblyPlan.from_dataset(reads, (21, 21, 4), num_shards=8,
+                                         unique_rate=0.2,
+                                         localize_out_factor=8)
+        outs = {}
+        for backend in ("pallas", "ref"):
+            p = dataclasses.replace(plan, kernel_backend=backend)
+            outs[backend] = Assembler(p, Mesh(num_shards=8)).assemble(reads)
+        for key in ("scaffold_seqs", "contigs", "alive"):
+            for a, b in zip(jax.tree.leaves(outs["pallas"][key]),
+                            jax.tree.leaves(outs["ref"][key])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        lens = np.asarray(outs["pallas"]["scaffold_seqs"].lengths)
+        assert int(lens.sum()) > 0
+        print("MESH BACKEND PARITY OK")
+        """,
+        # two full mesh assembles in one interpreter; compile-bound
+        timeout=2400,
+    )
+
+
 def test_stream_assemble_mesh_matches_in_memory():
     """CI parity smoke (ISSUE 3): Assembler.assemble_stream over a small
     mgsim dataset split into >= 2 batches, on an 8-device mesh with the

@@ -22,11 +22,13 @@ def test_kmer_extract_matches_ref(k, R, L):
     lengths = rng.integers(k, L + 1, size=(R,)).astype(np.int32)
     got = kmer_extract(jnp.asarray(bases), jnp.asarray(lengths), k=k)
     want = ref.kmer_extract_ref(jnp.asarray(bases), jnp.asarray(lengths), k=k)
-    gv, wv = np.asarray(got[3]), np.asarray(want[3])
-    np.testing.assert_array_equal(gv, wv)
-    for gi, wi in zip(got[:3], want[:3]):
-        # only compare where valid
-        np.testing.assert_array_equal(np.asarray(gi)[wv], np.asarray(wi)[wv])
+    wv = np.asarray(want.valid)
+    np.testing.assert_array_equal(np.asarray(got.valid), wv)
+    for field in ("hi", "lo", "hash", "left", "right", "flip"):
+        gi = np.asarray(getattr(got, field))
+        wi = np.asarray(getattr(want, field))
+        # only compare where valid (invalid lanes are unspecified)
+        np.testing.assert_array_equal(gi[wv], wi[wv], err_msg=field)
 
 
 # ---------- sw_extend ----------
