@@ -1,18 +1,21 @@
-"""Kernel-vs-ref microbenchmark for the fused k-mer extraction hot path.
+"""Kernel-vs-ref microbenchmark for the fused k-mer hot paths.
 
-K-mer extraction touches every input byte (paper §IV-C Table II), so the
-whole system's throughput rides on this one op.  This bench times
-`kernels.ops.kmer_extract` under both backends (DESIGN.md §8) at a
-pipeline-representative tile and records µs/read into BENCH_kernels.json —
-the trajectory file the CI bench-smoke job gates on.
+Two fused ops carry the system (DESIGN.md §8): `ops.kmer_extract` touches
+every input byte (paper §IV-C Table II), and `ops.mer_walk` is the §II-G /
+§III-D traversal that probes the walk tables base by base — MetaHipMer's
+dominant local-assembly cost at scale.  This bench times BOTH under both
+backends at pipeline-representative shapes and records µs/read and
+µs/contig-end into BENCH_kernels.json — the trajectory file the CI
+bench-smoke job gates on.
 
-Gated metric: `pallas_over_ref`, the steady-state ratio of the Pallas path
-to the jnp ref.  The ratio is machine-relative (both sides run on the same
-host in the same process), so it is stable across CI runners where raw
-microsecond numbers are not; an injected slowdown in either path moves it
-immediately.  On CPU the Pallas kernel runs in interpret mode, so the
-ratio hovers near 1 — on TPU hardware the same record shows the fusion
-win.  Absolute µs/read per backend is recorded (and loosely gated) for
+Gated metrics: `pallas_over_ref` (extraction) and `walk_pallas_over_ref`
+(walk), the steady-state ratios of the Pallas path to the jnp ref.  The
+ratios are machine-relative (both sides run on the same host in the same
+process, reps interleaved), so they are stable across CI runners where
+raw microsecond numbers are not; an injected slowdown in either path
+moves them immediately.  On CPU the Pallas kernels run in interpret mode,
+so the ratios sit above 1 — on TPU hardware the same records show the
+fusion win.  Absolute µs per backend is recorded (and loosely gated) for
 the trajectory.
 """
 from __future__ import annotations
@@ -26,6 +29,10 @@ SHAPES = [
     (2048, 100, 21),
     (2048, 100, 17),
 ]
+# walk workload: contig ends walking against localized tables
+WALK_CONTIGS = 128         # 2 ends each -> 256 walkers
+WALK_MER_SIZES = (17, 21, 25)
+WALK_MAX_EXT = 64
 REPS = 20
 
 
@@ -52,6 +59,86 @@ def _time_backends(bases, lengths, k: int) -> dict:
             )
             times[b].append(time.perf_counter() - t0)
     return {b: float(np.min(ts)) for b, ts in times.items()}
+
+
+def _walk_fixture():
+    """Contig ends + localized walk tables over a simulated genome.
+
+    Contigs are consecutive chunks of one genome and every read is
+    assigned to the chunk containing its true position, so the tables hold
+    realistic (contig, mer) evidence and most walkers advance many steps
+    before terminating — the shape the pipeline's extension stage runs.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import local_assembly
+    from repro.core.types import ContigSet
+    from repro.data import mgsim
+
+    chunk = 64
+    genome, reads, truth = mgsim.single_genome_reads(
+        17, genome_len=WALK_CONTIGS * chunk, coverage=12, read_len=100
+    )
+    C = WALK_CONTIGS
+    bases = np.full((C, chunk), 4, np.uint8)
+    for c in range(C):
+        bases[c] = np.asarray(genome)[c * chunk: (c + 1) * chunk]
+    contigs = ContigSet(
+        bases=jnp.asarray(bases),
+        lengths=jnp.full((C,), chunk, jnp.int32),
+        depths=jnp.ones((C,), jnp.float32),
+    )
+    alive = jnp.ones((C,), bool)
+    read_contig = jnp.asarray(
+        np.clip(np.asarray(truth.pos) // chunk, 0, C - 1), jnp.int32
+    )
+    tag_bits = min(16, 62 - 2 * max(WALK_MER_SIZES))
+    wt = local_assembly.build_walk_tables(
+        reads, read_contig, mer_sizes=WALK_MER_SIZES, tag_bits=tag_bits,
+        capacity=1 << 15,
+    )
+    bhi, blo, act = local_assembly.contig_end_buffers(contigs, alive)
+    wc = jnp.concatenate(
+        [jnp.arange(C, dtype=jnp.int32), jnp.arange(C, dtype=jnp.int32)]
+    )
+    return wt, bhi, blo, wc, act, tag_bits
+
+
+def _time_walk():
+    """Interleaved min-of-reps seconds per fused walk, both backends.
+
+    Returns ({backend: seconds}, num_walkers, mean_accepted_steps)."""
+    import jax
+
+    from repro.kernels import ops
+
+    wt, bhi, blo, wc, act, tag_bits = _walk_fixture()
+    kw = dict(mer_sizes=WALK_MER_SIZES, tag_bits=tag_bits,
+              max_ext=WALK_MAX_EXT)
+    backends = ("pallas", "ref")
+    outs = {}
+    for b in backends:  # compile + warm both before any timing
+        outs[b] = jax.block_until_ready(
+            ops.mer_walk(wt, bhi, blo, wc, act, backend=b, **kw)
+        )
+    # acceptance before timing: bit-identical walks, and a real workload
+    for field in ("ext_bases", "ext_len", "status", "hit", "hit_pos"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(outs["pallas"], field)),
+            np.asarray(getattr(outs["ref"], field)), err_msg=field,
+        )
+    mean_steps = float(np.asarray(outs["ref"].ext_len).mean())
+    assert mean_steps > 4, f"degenerate walk fixture: {mean_steps}"
+    times = {b: [] for b in backends}
+    for _ in range(REPS):
+        for b in backends:
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                ops.mer_walk(wt, bhi, blo, wc, act, backend=b, **kw)
+            )
+            times[b].append(time.perf_counter() - t0)
+    E = int(bhi.shape[0])
+    return {b: float(np.min(ts)) for b, ts in times.items()}, E, mean_steps
 
 
 def run(verbose: bool = True):
@@ -99,6 +186,7 @@ def _run_inner(verbose: bool):
         secs = _time_backends(bases, lengths, k)
         for backend, sec in secs.items():
             row = {
+                "op": "kmer_extract",
                 "backend": backend, "R": R, "L": L, "k": k,
                 "us_per_call": sec * 1e6,
                 "us_per_read": sec * 1e6 / R,
@@ -108,6 +196,23 @@ def _run_inner(verbose: bool):
                 print(f"kmer_extract[{backend}] R={R} L={L} k={k}: "
                       f"{row['us_per_call']:.0f} us/call "
                       f"({row['us_per_read']:.3f} us/read)")
+    walk_secs, E, mean_steps = _time_walk()
+    for backend, sec in walk_secs.items():
+        row = {
+            "op": "mer_walk",
+            "backend": backend, "E": E,
+            "mer_sizes": list(WALK_MER_SIZES), "max_ext": WALK_MAX_EXT,
+            "mean_steps": mean_steps,
+            "us_per_call": sec * 1e6,
+            "us_per_end": sec * 1e6 / E,
+        }
+        rows.append(row)
+        if verbose:
+            print(f"mer_walk[{backend}] E={E} "
+                  f"rungs={WALK_MER_SIZES} max_ext={WALK_MAX_EXT}: "
+                  f"{row['us_per_call']:.0f} us/call "
+                  f"({row['us_per_end']:.3f} us/contig-end, "
+                  f"mean {mean_steps:.1f} accepted steps)")
     return rows
 
 
@@ -115,21 +220,33 @@ def main():
     import jax
 
     rows = run()
+    ex_rows = [r for r in rows if r["op"] == "kmer_extract"]
+    walk_rows = [r for r in rows if r["op"] == "mer_walk"]
     mean_us = lambda b: float(np.mean(
-        [r["us_per_read"] for r in rows if r["backend"] == b]
+        [r["us_per_read"] for r in ex_rows if r["backend"] == b]
+    ))
+    walk_us = lambda b: float(np.mean(
+        [r["us_per_end"] for r in walk_rows if r["backend"] == b]
     ))
     pallas_us, ref_us = mean_us("pallas"), mean_us("ref")
+    wp_us, wr_us = walk_us("pallas"), walk_us("ref")
     derived = {
         "pallas_us_per_read": pallas_us,
         "ref_us_per_read": ref_us,
         "pallas_over_ref": pallas_us / ref_us,
+        "walk_pallas_us_per_end": wp_us,
+        "walk_ref_us_per_end": wr_us,
+        "walk_pallas_over_ref": wp_us / wr_us,
         "jax_backend": jax.default_backend(),
     }
     print("\nname,us_per_call,derived")
-    for r in rows:
+    for r in ex_rows:
         print(f"kmer_extract_{r['backend']}_k{r['k']},"
               f"{r['us_per_call']:.0f},us_per_read="
               f"{r['us_per_read']:.3f}")
+    for r in walk_rows:
+        print(f"mer_walk_{r['backend']},{r['us_per_call']:.0f},"
+              f"us_per_end={r['us_per_end']:.3f}")
     from . import record
 
     record.emit("kernels", rows, derived=derived)

@@ -14,11 +14,11 @@ round-robin (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
 
 from . import kmer, local_assembly
 from .types import ContigSet, ReadSet
@@ -46,9 +46,6 @@ def _member_bases(contigs: ContigSet, cid, orient, Lmax: int):
     return jnp.where(i < length[:, None], out, 4).astype(jnp.uint8), length
 
 
-@functools.partial(
-    jax.jit, static_argnames=("mer_sizes", "tag_bits", "seed_len", "max_walk")
-)
 def _gap_walks(
     wt: local_assembly.WalkTables,
     mer_sizes: tuple,
@@ -62,43 +59,35 @@ def _gap_walks(
     *,
     seed_len: int,
     max_walk: int,
+    backend=None,
 ):
-    """Walk from each gap's left flank; stop early if the target k-mer of
-    the right flank is produced.  Returns (bases, len, hit_target)."""
-    E = left_tail_hi.shape[0]
-    walk = local_assembly.mer_walk(
+    """Walk from each gap's left flank; stop when the target k-mer of the
+    right flank is produced.  Returns (walk, hit, hit_pos).
+
+    The target check runs INSIDE the fused walk kernel (`ops.mer_walk`
+    with seed_len > 0, DESIGN.md §8): after each accepted base the
+    seed_len-suffix of the walk buffer is compared against the target, and
+    a matching walker halts with status HIT at hit_pos accepted bases —
+    the same first-match position the historical post-walk scan found.
+    """
+    out = ops.mer_walk(
         wt,
         left_tail_hi,
         left_tail_lo,
         left_contig,
         active,
-        mer_sizes=mer_sizes,
+        mer_sizes=tuple(mer_sizes),
         tag_bits=tag_bits,
         max_ext=max_walk,
+        target_hi=target_hi,
+        target_lo=target_lo,
+        seed_len=seed_len,
+        backend=backend,
     )
-    # scan the walked bases for the target seed (right contig's first k-mer)
-    buf_hi = left_tail_hi
-    buf_lo = left_tail_lo
-    hit = jnp.zeros((E,), bool)
-    hit_pos = jnp.full((E,), NONE)
-
-    def body(j, state):
-        buf_hi, buf_lo, hit, hit_pos = state
-        b = walk.ext_bases[:, j]
-        ok = (b < 4) & (j < walk.ext_len)
-        nhi, nlo = kmer.append_base(buf_hi, buf_lo, jnp.where(ok, b, 0), k=local_assembly.BUF_K)
-        buf_hi = jnp.where(ok, nhi, buf_hi)
-        buf_lo = jnp.where(ok, nlo, buf_lo)
-        cur_hi, cur_lo = local_assembly._suffix_mer(buf_hi, buf_lo, seed_len)
-        match = ok & (cur_hi == target_hi) & (cur_lo == target_lo) & ~hit
-        hit_pos = jnp.where(match, j + 1, hit_pos)
-        hit = hit | match
-        return buf_hi, buf_lo, hit, hit_pos
-
-    _, _, hit, hit_pos = jax.lax.fori_loop(
-        0, max_walk, body, (buf_hi, buf_lo, hit, hit_pos)
+    walk = local_assembly.WalkResult(
+        ext_bases=out.ext_bases, ext_len=out.ext_len, status=out.status
     )
-    return walk, hit, hit_pos
+    return walk, out.hit, out.hit_pos
 
 
 def close_and_render(
@@ -125,7 +114,7 @@ def close_and_render(
     return close_and_render_with_tables(
         scaffs, contigs, wt, seed_len=seed_len, mer_sizes=mer_sizes,
         max_walk=max_walk, max_scaffold_len=max_scaffold_len,
-        max_n_run=max_n_run,
+        max_n_run=max_n_run, backend=backend,
     )
 
 
@@ -139,6 +128,7 @@ def close_and_render_with_tables(
     max_walk: int = 64,
     max_scaffold_len: int = 1 << 13,
     max_n_run: int = 64,
+    backend=None,
 ) -> ScaffoldSeqs:
     """Gap closure from prebuilt walk tables (streaming ingest accumulates
     them batch by batch, DESIGN.md §7; the in-memory wrapper above builds
@@ -182,6 +172,7 @@ def close_and_render_with_tables(
         active=g_active,
         seed_len=seed_len,
         max_walk=max_walk,
+        backend=backend,
     )
     # closure bases: the walked bases minus the trailing seed overlap
     fill_len = jnp.where(hit, jnp.clip(hit_pos - seed_len, 0), NONE)  # -1: open

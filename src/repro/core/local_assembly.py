@@ -14,11 +14,15 @@ Mechanics preserved from the paper:
 
 TPU adaptation: UPC work stealing balanced unpredictable per-walk costs
 across processors; here every walker advances in vectorized lockstep (one
-while_loop over all 2C contig ends), so imbalance dissolves into SIMD lane
-predication — the BSP analogue of stealing (DESIGN.md §2).  The
+fused step loop over all 2C contig ends), so imbalance dissolves into SIMD
+lane predication — the BSP analogue of stealing (DESIGN.md §2).  The
 (contig, mer) key is the mer code with the contig id embedded in the spare
 high bits of the dual-lane key (kmer.embed_tag), turning per-contig
-isolation into plain hash-table keying.
+isolation into plain hash-table keying.  The walk itself is a fused
+kernel hot path: `mer_walk` dispatches through `kernels.ops.mer_walk`
+(Pallas kernel or bit-identical jnp ref, DESIGN.md §8) so the per-step
+suffix update, three-rung tagged probe, ladder vote, and base append run
+in one pass per walker tile.
 """
 from __future__ import annotations
 
@@ -34,10 +38,12 @@ from . import dht, kmer
 from .types import ContigSet, ReadSet
 
 NONE = jnp.int32(-1)
-BUF_K = 31  # rolling suffix buffer width (max supported mer)
 
-# walk status codes
-ACTIVE, DEADEND, FORK, DONE = 0, 1, 2, 3
+# single source of truth for the walk's buffer width and status codes is
+# the fused kernel (HIT: gap walk reached its target seed, §III-D)
+from repro.kernels.mer_walk import (  # noqa: E402
+    ACTIVE, BUF_K, DEADEND, DONE, FORK, HIT,
+)
 
 
 class WalkTables(NamedTuple):
@@ -154,33 +160,12 @@ def _suffix_mer(buf_hi, buf_lo, m: int):
     return buf_hi & mask_hi, buf_lo & mask_lo
 
 
-def _query_rung(wt: WalkTables, rung: int, m: int, buf_hi, buf_lo, contig, *,
-                tag_bits: int, active):
-    """Right-extension histogram for the current suffix mer on one rung."""
-    mhi, mlo = _suffix_mer(buf_hi, buf_lo, m)
-    chi, clo, flip = kmer.canonical(mhi, mlo, k=m)
-    thi, tlo = kmer.embed_tag(chi, clo, contig, k=m, tag_bits=tag_bits)
-    slots = dht.lookup(wt.tables[rung], thi, tlo, active)
-    ok = slots >= 0
-    s = jnp.clip(slots, 0)
-    rh = wt.right_hist[rung][s]
-    lh = wt.left_hist[rung][s]
-    # reading frame: if the canonical form is the RC, "right" in walk frame
-    # is the complemented LEFT histogram of the stored form
-    hist = jnp.where(flip[:, None], lh[:, ::-1], rh)
-    return jnp.where(ok[:, None] & active[:, None], hist, 0)
-
-
 class WalkResult(NamedTuple):
     ext_bases: jnp.ndarray   # [E, max_ext] uint8 accepted bases (4 pad)
     ext_len: jnp.ndarray     # [E] int32
     status: jnp.ndarray      # [E] final status code
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("mer_sizes", "tag_bits", "max_ext", "min_votes", "dominance"),
-)
 def mer_walk(
     wt: WalkTables,
     start_hi,
@@ -193,91 +178,22 @@ def mer_walk(
     max_ext: int = 64,
     min_votes: int = 1,
     dominance: int = 4,
+    backend=None,
 ) -> WalkResult:
     """Vectorized dynamic-mer walk for E walkers (2 per contig).
 
     start_hi/lo: BUF_K-wide packed suffix of each walker's contig end,
-    oriented so the walk appends rightward.
+    oriented so the walk appends rightward.  The walk itself is the fused
+    `ops.mer_walk` hot path (DESIGN.md §8); this wrapper keeps the
+    historical WalkResult shape for the extension/graft pipeline.
     """
-    E = start_hi.shape[0]
-    n_rungs = len(mer_sizes)
-    mid_rung = n_rungs // 2
-
-    def choose(hist):
-        """(base, kind): kind 0=accept, 1=deadend, 2=fork."""
-        c1 = hist.max(axis=-1)
-        b1 = hist.argmax(axis=-1).astype(jnp.uint8)
-        viable = (hist >= min_votes).sum(axis=-1)
-        total = hist.sum(axis=-1)
-        second = total - c1  # mass off the argmax
-        uncontested = (viable == 1) & (c1 >= min_votes)
-        dominated = (viable > 1) & (c1 >= dominance * jnp.maximum(second, 1)) & (
-            c1 >= min_votes + 1
-        )
-        accept = uncontested | dominated
-        deadend = viable == 0
-        kind = jnp.where(accept, 0, jnp.where(deadend, 1, 2))
-        return b1, kind
-
-    def cond(state):
-        _, _, _, _, status, steps, _, _ = state
-        return jnp.any(status == ACTIVE) & (steps < max_ext)
-
-    def body(state):
-        buf_hi, buf_lo, rung, last_shift, status, steps, out, out_len = state
-        act = status == ACTIVE
-        # query every rung, select the walker's current rung
-        hists = jnp.stack(
-            [
-                _query_rung(wt, r, mer_sizes[r], buf_hi, buf_lo, contig,
-                            tag_bits=tag_bits, active=act)
-                for r in range(n_rungs)
-            ],
-            axis=1,
-        )  # [E, n_rungs, 4]
-        hist = jnp.take_along_axis(
-            hists, rung[:, None, None].astype(jnp.int32), axis=1
-        )[:, 0]
-        base, kind = choose(hist)
-        # ladder transitions (paper §II-G):
-        #   fork    -> upshift; at top, or right after a downshift: stop FORK
-        #   deadend -> downshift; at bottom, or right after an upshift: DEADEND
-        at_top = rung == n_rungs - 1
-        at_bottom = rung == 0
-        stop_fork = act & (kind == 2) & (at_top | (last_shift == -1))
-        stop_dead = act & (kind == 1) & (at_bottom | (last_shift == +1))
-        upshift = act & (kind == 2) & ~stop_fork
-        downshift = act & (kind == 1) & ~stop_dead
-        accept = act & (kind == 0)
-        new_rung = jnp.clip(rung + upshift.astype(jnp.int32)
-                            - downshift.astype(jnp.int32), 0, n_rungs - 1)
-        new_shift = jnp.where(
-            upshift, 1, jnp.where(downshift, -1, jnp.where(accept, 0, last_shift))
-        )
-        nhi, nlo = kmer.append_base(buf_hi, buf_lo, base, k=BUF_K)
-        buf_hi = jnp.where(accept, nhi, buf_hi)
-        buf_lo = jnp.where(accept, nlo, buf_lo)
-        out = out.at[jnp.arange(E), jnp.clip(out_len, 0, max_ext - 1)].set(
-            jnp.where(accept, base, out[jnp.arange(E), jnp.clip(out_len, 0, max_ext - 1)])
-        )
-        out_len = out_len + accept.astype(jnp.int32)
-        status = jnp.where(stop_fork, FORK, jnp.where(stop_dead, DEADEND, status))
-        return buf_hi, buf_lo, new_rung, new_shift, status, steps + 1, out, out_len
-
-    init = (
-        start_hi,
-        start_lo,
-        jnp.full((E,), mid_rung, jnp.int32),
-        jnp.zeros((E,), jnp.int32),
-        jnp.where(active0, ACTIVE, DONE),
-        jnp.int32(0),
-        jnp.full((E, max_ext), 4, jnp.uint8),
-        jnp.zeros((E,), jnp.int32),
+    out = ops.mer_walk(
+        wt, start_hi, start_lo, contig, active0,
+        mer_sizes=tuple(mer_sizes), tag_bits=tag_bits, max_ext=max_ext,
+        min_votes=min_votes, dominance=dominance, backend=backend,
     )
-    buf_hi, buf_lo, rung, last_shift, status, steps, out, out_len = (
-        jax.lax.while_loop(cond, body, init)
-    )
-    return WalkResult(ext_bases=out, ext_len=out_len, status=status)
+    return WalkResult(ext_bases=out.ext_bases, ext_len=out.ext_len,
+                      status=out.status)
 
 
 def contig_end_buffers(contigs: ContigSet, alive):
@@ -348,6 +264,7 @@ def extend_with_tables(
     mer_sizes: tuple,
     max_ext: int = 64,
     min_len: int | None = None,
+    backend=None,
 ):
     """Walk both ends from prebuilt tables and graft the extensions.
 
@@ -369,7 +286,7 @@ def extend_with_tables(
     )
     walk = mer_walk(
         wt, bhi, blo, walker_contig, act, mer_sizes=tuple(mer_sizes),
-        tag_bits=tag_bits, max_ext=max_ext,
+        tag_bits=tag_bits, max_ext=max_ext, backend=backend,
     )
     return apply_extensions(contigs, alive, walk), walk
 
@@ -399,5 +316,5 @@ def extend_contigs(
     )
     return extend_with_tables(
         wt, contigs, alive, mer_sizes=mer_sizes, max_ext=max_ext,
-        min_len=min_len,
+        min_len=min_len, backend=backend,
     )

@@ -16,8 +16,10 @@ Algorithm 3 end to end on a mesh:
     of merAligner's software cache, with zero misses).
   * `sharded_extend` — §II-G local assembly after read localization: reads
     route to the shard owning their (mate-projected) aligned contig, each
-    shard mer-walks only the contig ends it owns (c mod S), and the
-    extended rows combine by ownership.
+    shard mer-walks only the contig ends it owns (c mod S) — the walk
+    itself runs through the fused `kernels.ops.mer_walk` backend dispatch,
+    same as Local (DESIGN.md §8) — and the extended rows combine by
+    ownership.
   * `sharded_link_candidates` — post-localization per-shard scaffolding:
     read pairs route *atomically* to the owner of their first aligned
     contig with their alignments as payload, mate pointers are rebuilt

@@ -1,0 +1,369 @@
+"""Pallas TPU kernel: fused dynamic-mer ladder walk (paper §II-G / §III-D).
+
+Contig extension and gap closing both advance a population of walkers one
+base at a time: take the current suffix mer on each ladder rung,
+canonicalize it, tag it with the walker's contig id, probe the (contig,
+mer) hash table, vote over the extension histogram, append the chosen
+base, and shift the ladder on fork/dead-end.  In MetaHipMer this traversal
+of the distributed hash tables is a dominant hot path at scale; the
+unfused jnp formulation round-trips every per-step intermediate
+([E, n_rungs] codes, probe chains, gathered histograms) through HBM on
+every one of the up-to-max_ext iterations.
+
+This kernel keeps the whole walk resident: the per-rung key/used/histogram
+arrays are fetched once per walker tile and stay in VMEM for all steps,
+and the per-walker rolling state (dual-lane suffix buffer, rung,
+last-shift, status, emitted bases) lives in VREGs across the fused step
+loop.  One invocation performs the COMPLETE walk for a [BLOCK_WALKERS]
+tile of contig ends — there is no per-step kernel relaunch and no per-step
+HBM traffic beyond the final outputs.
+
+Gap closing reuses the same kernel with a *target-mer stop condition*
+(static `seed_len` > 0): after each accepted base the seed_len-suffix of
+the walk buffer is compared against the gap's target mer (the right
+flank's leading seed); on a match the walker records hit position
+`out_len` and halts with status HIT.  Extension walks pass seed_len=0 and
+the comparison is compiled out.
+
+Semantics are bit-identical to the pre-fusion `lax.while_loop` walk (the
+jnp oracle in `kernels/ref.py` IS that loop): the step loop is a fori over
+max_ext — once no walker is ACTIVE every iteration is a no-op, so the
+fixed trip count produces the same state as the early-exiting while loop —
+and the probe loop mirrors `core.dht.lookup` exactly (first matching slot
+along the linear-probe chain, stopping at the first empty slot, bounded by
+the table's max_probe).
+
+Layout: grid over walker tiles; the stacked per-rung table arrays
+([n_rungs, cap] keys / [n_rungs, cap, 4] histograms) map to block (0,...)
+for every tile, so Pallas keeps one VMEM copy live across the grid.
+Capacity is bounded by VMEM (~1 << 16 rows x 3 rungs fits); larger tables
+belong to the sharded path, which walks only owned contigs per shard.
+
+Integer-only VPU work, same dual-lane uint32 convention as
+`kmer_extract.py` (DESIGN.md §2): all shift amounts are static Python
+ints, so every lane op vectorizes on the 32-bit datapath.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_WALKERS = 8
+BUF_K = 31  # rolling suffix buffer width (kept literal: kernel stays leaf)
+
+# walk status codes (mirrors core.local_assembly)
+ACTIVE, DEADEND, FORK, DONE, HIT = 0, 1, 2, 3, 4
+
+
+class MerWalkOut(NamedTuple):
+    """Fused walk outputs for E walkers.
+
+    `hit`/`hit_pos` are all-False/-1 unless a target mer was supplied
+    (seed_len > 0); `hit_pos` is the number of accepted bases after which
+    the target seed first appeared as the buffer suffix.
+    """
+
+    ext_bases: jnp.ndarray  # [E, max_ext] uint8 accepted bases (4 pad)
+    ext_len: jnp.ndarray    # [E] int32
+    status: jnp.ndarray     # [E] final status code
+    hit: jnp.ndarray        # [E] bool target seed reached
+    hit_pos: jnp.ndarray    # [E] int32 accepted-base count at the hit (-1)
+
+
+def _masks(k: int):
+    bits = 2 * k
+    if bits >= 32:
+        return jnp.uint32(0xFFFFFFFF), jnp.uint32((1 << (bits - 32)) - 1)
+    return jnp.uint32((1 << bits) - 1), jnp.uint32(0)
+
+
+def _mix32(x):
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _hash(hi, lo):
+    return _mix32(hi ^ _mix32(lo ^ jnp.uint32(0x9E3779B9)))
+
+
+def _rev32_2bit(x):
+    x = ((x & jnp.uint32(0x33333333)) << 2) | ((x >> 2) & jnp.uint32(0x33333333))
+    x = ((x & jnp.uint32(0x0F0F0F0F)) << 4) | ((x >> 4) & jnp.uint32(0x0F0F0F0F))
+    x = ((x & jnp.uint32(0x00FF00FF)) << 8) | ((x >> 8) & jnp.uint32(0x00FF00FF))
+    return (x << 16) | (x >> 16)
+
+
+def _suffix(hi, lo, m: int):
+    mask_lo, mask_hi = _masks(m)
+    return hi & mask_hi, lo & mask_lo
+
+
+def _canonical(hi, lo, k: int):
+    """(chi, clo, flip): lexicographic min of the mer and its RC."""
+    mask_lo, mask_hi = _masks(k)
+    bits = 2 * k
+    clo = (~lo) & mask_lo
+    if k <= 16:
+        r = _rev32_2bit(clo)
+        rlo = r >> (32 - bits) if k < 16 else r
+        rhi = jnp.zeros_like(hi)
+    else:
+        chi = (~hi) & mask_hi
+        rhi64 = _rev32_2bit(clo)
+        rlo64 = _rev32_2bit(chi)
+        s = 64 - bits
+        if s == 0:
+            rhi, rlo = rhi64, rlo64
+        elif s >= 32:
+            rhi, rlo = jnp.zeros_like(hi), rhi64 >> (s - 32)
+        else:
+            rhi = rhi64 >> s
+            rlo = (rlo64 >> s) | (rhi64 << (32 - s))
+    flip = (rhi < hi) | ((rhi == hi) & (rlo < lo))
+    return jnp.where(flip, rhi, hi), jnp.where(flip, rlo, lo), flip
+
+
+def _embed_tag(hi, lo, tag, k: int, tag_bits: int):
+    t = tag.astype(jnp.uint32) & jnp.uint32((1 << tag_bits) - 1)
+    shift = 2 * k
+    if shift >= 32:
+        return hi | (t << (shift - 32)), lo
+    return hi | (t >> (32 - shift)), lo | (t << shift)
+
+
+def _append_base(hi, lo, base):
+    """Append into the BUF_K-wide rolling buffer (drop the oldest base)."""
+    mask_lo, mask_hi = _masks(BUF_K)
+    new_hi = ((hi << 2) | (lo >> 30)) & mask_hi
+    new_lo = ((lo << 2) | base.astype(jnp.uint32)) & mask_lo
+    return new_hi, new_lo
+
+
+def _probe(key_hi, key_lo, valid, slot_hi, slot_lo, used, max_probe, cap: int):
+    """First matching slot per key along the linear-probe chain, -1 absent.
+
+    Mirrors `core.dht.lookup` op for op: the chain ends at the first empty
+    slot, and no key examines more than max_probe + 2 slots.  The early
+    all-done exit only skips iterations that would be no-ops, so the
+    result is independent of tile width.
+    """
+    h0 = (_hash(key_hi, key_lo) & jnp.uint32(cap - 1)).astype(jnp.int32)
+    bound = max_probe + 1
+
+    def cond(state):
+        _, done, _, i = state
+        return jnp.any(~done) & (i <= bound)
+
+    def body(state):
+        attempt, done, result, i = state
+        u = used[attempt]
+        match = u & (slot_hi[attempt] == key_hi) & (slot_lo[attempt] == key_lo)
+        result = jnp.where(match & ~done, attempt, result)
+        done = done | match | ~u
+        attempt = jnp.where(done, attempt, (attempt + 1) & (cap - 1))
+        return attempt, done, result, i + 1
+
+    init = (h0, ~valid, jnp.full(key_hi.shape, -1, jnp.int32), jnp.int32(0))
+    _, _, result, _ = jax.lax.while_loop(cond, body, init)
+    return result
+
+
+def _kernel(start_hi_ref, start_lo_ref, contig_ref, active_ref, thit_hi_ref,
+            thit_lo_ref, keys_hi_ref, keys_lo_ref, used_ref, mp_ref, rh_ref,
+            lh_ref, out_ref, len_ref, status_ref, hit_ref, hitpos_ref, *,
+            mer_sizes: tuple, tag_bits: int, max_ext: int, min_votes: int,
+            dominance: int, seed_len: int):
+    buf_hi0 = start_hi_ref[...]   # [E]
+    buf_lo0 = start_lo_ref[...]
+    contig = contig_ref[...]
+    active0 = active_ref[...]
+    t_hi = thit_hi_ref[...]
+    t_lo = thit_lo_ref[...]
+    keys_hi = keys_hi_ref[...]    # [n_rungs, cap]
+    keys_lo = keys_lo_ref[...]
+    used = used_ref[...]
+    mp = mp_ref[...]              # [n_rungs]
+    rh = rh_ref[...]              # [n_rungs, cap, 4]
+    lh = lh_ref[...]
+    E = buf_hi0.shape[0]
+    cap = keys_hi.shape[1]
+    n_rungs = len(mer_sizes)
+    mid_rung = n_rungs // 2
+    col = jax.lax.broadcasted_iota(jnp.int32, (E, max_ext), 1)
+
+    def choose(hist):
+        """(base, kind): kind 0=accept, 1=deadend, 2=fork (§II-G vote)."""
+        c1 = hist.max(axis=-1)
+        b1 = hist.argmax(axis=-1).astype(jnp.uint8)
+        viable = (hist >= min_votes).sum(axis=-1)
+        total = hist.sum(axis=-1)
+        second = total - c1
+        uncontested = (viable == 1) & (c1 >= min_votes)
+        dominated = (viable > 1) & (c1 >= dominance * jnp.maximum(second, 1)) & (
+            c1 >= min_votes + 1
+        )
+        accept = uncontested | dominated
+        deadend = viable == 0
+        kind = jnp.where(accept, 0, jnp.where(deadend, 1, 2))
+        return b1, kind
+
+    def body(_, state):
+        buf_hi, buf_lo, rung, last_shift, status, out, out_len, hit, hit_pos = state
+        act = status == ACTIVE
+        hists = []
+        for r, m in enumerate(mer_sizes):
+            mhi, mlo = _suffix(buf_hi, buf_lo, m)
+            chi, clo, flip = _canonical(mhi, mlo, m)
+            thi, tlo = _embed_tag(chi, clo, contig, m, tag_bits)
+            slots = _probe(thi, tlo, act, keys_hi[r], keys_lo[r], used[r],
+                           mp[r], cap)
+            ok = slots >= 0
+            s = jnp.clip(slots, 0)
+            rsel = rh[r][s]          # [E, 4]
+            lsel = lh[r][s]
+            # walk frame: canonical == RC reads the complemented LEFT hist
+            hist = jnp.where(flip[:, None], lsel[:, ::-1], rsel)
+            hists.append(jnp.where(ok[:, None] & act[:, None], hist, 0))
+        hist = jnp.take_along_axis(
+            jnp.stack(hists, axis=1), rung[:, None, None].astype(jnp.int32),
+            axis=1,
+        )[:, 0]
+        base, kind = choose(hist)
+        at_top = rung == n_rungs - 1
+        at_bottom = rung == 0
+        stop_fork = act & (kind == 2) & (at_top | (last_shift == -1))
+        stop_dead = act & (kind == 1) & (at_bottom | (last_shift == +1))
+        upshift = act & (kind == 2) & ~stop_fork
+        downshift = act & (kind == 1) & ~stop_dead
+        accept = act & (kind == 0)
+        rung = jnp.clip(rung + upshift.astype(jnp.int32)
+                        - downshift.astype(jnp.int32), 0, n_rungs - 1)
+        last_shift = jnp.where(
+            upshift, 1, jnp.where(downshift, -1,
+                                  jnp.where(accept, 0, last_shift))
+        )
+        nhi, nlo = _append_base(buf_hi, buf_lo, base)
+        buf_hi = jnp.where(accept, nhi, buf_hi)
+        buf_lo = jnp.where(accept, nlo, buf_lo)
+        out = jnp.where(accept[:, None] & (col == out_len[:, None]),
+                        base[:, None], out)
+        out_len = out_len + accept.astype(jnp.int32)
+        status = jnp.where(stop_fork, FORK,
+                           jnp.where(stop_dead, DEADEND, status))
+        if seed_len > 0:
+            shi, slo = _suffix(buf_hi, buf_lo, seed_len)
+            match = accept & (shi == t_hi) & (slo == t_lo) & ~hit
+            hit_pos = jnp.where(match, out_len, hit_pos)
+            hit = hit | match
+            status = jnp.where(match, HIT, status)
+        return (buf_hi, buf_lo, rung, last_shift, status, out, out_len, hit,
+                hit_pos)
+
+    init = (
+        buf_hi0,
+        buf_lo0,
+        jnp.full((E,), mid_rung, jnp.int32),
+        jnp.zeros((E,), jnp.int32),
+        jnp.where(active0, ACTIVE, DONE),
+        jnp.full((E, max_ext), 4, jnp.uint8),
+        jnp.zeros((E,), jnp.int32),
+        jnp.zeros((E,), bool),
+        jnp.full((E,), -1, jnp.int32),
+    )
+    _, _, _, _, status, out, out_len, hit, hit_pos = jax.lax.fori_loop(
+        0, max_ext, body, init
+    )
+    out_ref[...] = out
+    len_ref[...] = out_len
+    status_ref[...] = status
+    hit_ref[...] = hit
+    hitpos_ref[...] = hit_pos
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mer_sizes", "tag_bits", "max_ext", "min_votes",
+                     "dominance", "seed_len", "interpret", "block_walkers"),
+)
+def mer_walk(
+    start_hi,
+    start_lo,
+    contig,
+    active,
+    target_hi,
+    target_lo,
+    keys_hi,
+    keys_lo,
+    used,
+    max_probe,
+    right_hist,
+    left_hist,
+    *,
+    mer_sizes: tuple,
+    tag_bits: int,
+    max_ext: int,
+    min_votes: int = 1,
+    dominance: int = 4,
+    seed_len: int = 0,
+    interpret: bool = True,
+    block_walkers: int = BLOCK_WALKERS,
+) -> MerWalkOut:
+    """Complete ladder walk for E walkers in one fused pass.
+
+    Args:
+      start_hi/lo: [E] uint32 BUF_K-wide packed suffix of each walker's
+        contig end, oriented so the walk appends rightward.
+      contig: [E] int32 walker contig ids (the table tag).
+      active: [E] bool.
+      target_hi/lo: [E] uint32 packed seed_len-mer; ignored if seed_len=0.
+      keys_hi/lo, used: [n_rungs, cap] stacked per-rung table key arrays.
+      max_probe: [n_rungs] int32 per-rung probe bounds.
+      right_hist/left_hist: [n_rungs, cap, 4] int32 extension histograms.
+    Returns:
+      MerWalkOut, each lane [E] (ext_bases [E, max_ext]).
+    """
+    E = start_hi.shape[0]
+    n = len(mer_sizes)
+    cap = keys_hi.shape[1]
+    assert E % block_walkers == 0, f"E={E} not divisible by {block_walkers}"
+    assert keys_hi.shape[0] == n and right_hist.shape == (n, cap, 4)
+    grid = (E // block_walkers,)
+    vec = lambda: pl.BlockSpec((block_walkers,), lambda i: (i,))
+    full = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    out_shape = [
+        jax.ShapeDtypeStruct((E, max_ext), jnp.uint8),
+        jax.ShapeDtypeStruct((E,), jnp.int32),
+        jax.ShapeDtypeStruct((E,), jnp.int32),
+        jax.ShapeDtypeStruct((E,), jnp.bool_),
+        jax.ShapeDtypeStruct((E,), jnp.int32),
+    ]
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, mer_sizes=tuple(mer_sizes), tag_bits=tag_bits,
+            max_ext=max_ext, min_votes=min_votes, dominance=dominance,
+            seed_len=seed_len,
+        ),
+        grid=grid,
+        in_specs=[
+            vec(), vec(), vec(), vec(), vec(), vec(),
+            full((n, cap)), full((n, cap)), full((n, cap)),
+            full((n,)),
+            full((n, cap, 4)), full((n, cap, 4)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_walkers, max_ext), lambda i: (i, 0)),
+            vec(), vec(), vec(), vec(),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(start_hi, start_lo, contig, active, target_hi, target_lo,
+      keys_hi, keys_lo, used, max_probe, right_hist, left_hist)
+    return MerWalkOut(*out)

@@ -19,9 +19,12 @@ Selection order, strongest first:
      ``"ref"`` elsewhere — the backends are bit-identical, and off-TPU the
      kernel only runs through the interpreter.
 
-The k-mer extraction path (`kmer_extract`) is THE system hot path: all
-extraction/canonicalization/hashing in core/, stream/, and dist/ goes
-through this module — call `kernels.kmer_extract` nowhere else.
+The k-mer extraction path (`kmer_extract`) is THE system ingest hot path:
+all extraction/canonicalization/hashing in core/, stream/, and dist/ goes
+through this module — call `kernels.kmer_extract` nowhere else.  The
+traversal twin is `mer_walk`: every §II-G contig-extension and §III-D
+gap-closing ladder walk (Local, Mesh shard bodies, streaming driver)
+dispatches here too.
 """
 from __future__ import annotations
 
@@ -32,10 +35,12 @@ import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import kmer_extract as _ke
+from . import mer_walk as _mw
 from . import ref
 from . import ssd_scan as _ssd
 from . import sw_extend as _sw
 from .kmer_extract import BLOCK_READS, KmerLanes  # re-export  # noqa: F401
+from .mer_walk import BLOCK_WALKERS, MerWalkOut  # re-export  # noqa: F401
 
 BACKENDS = ("pallas", "ref")
 ENV_VAR = "REPRO_KERNELS"
@@ -120,6 +125,77 @@ def kmer_extract(bases, lengths, *, k: int, backend=None,
     if pad:
         lanes = KmerLanes(*(x[:R] for x in lanes))
     return lanes
+
+
+def mer_walk(
+    wt,
+    start_hi,
+    start_lo,
+    contig,
+    active,
+    *,
+    mer_sizes: tuple,
+    tag_bits: int,
+    max_ext: int = 64,
+    min_votes: int = 1,
+    dominance: int = 4,
+    target_hi=None,
+    target_lo=None,
+    seed_len: int = 0,
+    backend=None,
+) -> MerWalkOut:
+    """Fused dynamic-mer ladder walk for E contig ends (§II-G / §III-D).
+
+    The single walk path of the system: contig extension
+    (`local_assembly.extend_with_tables`) and gap closing
+    (`gap_closing.close_and_render_with_tables`) — on Local, Mesh, and the
+    streaming driver — all land here.  `wt` is a
+    `local_assembly.WalkTables`-shaped record (tuples of per-rung
+    `dht.HashTable`s plus right/left extension histograms, one rung per
+    entry of `mer_sizes`); it is normalized into stacked [n_rungs, ...]
+    arrays so both backends consume one form.
+
+    Pass `target_hi/lo` + `seed_len` > 0 for the gap-closing variant: a
+    walker whose buffer suffix reaches the target seed records
+    `hit_pos` (accepted-base count) and halts with status HIT.
+    """
+    b = resolve_backend(backend)
+    n = len(mer_sizes)
+    assert len(wt.tables) == n, (len(wt.tables), mer_sizes)
+    cap = wt.tables[0].capacity
+    assert all(t.capacity == cap for t in wt.tables), "rung capacity mismatch"
+    keys_hi = jnp.stack([t.slot_hi for t in wt.tables])
+    keys_lo = jnp.stack([t.slot_lo for t in wt.tables])
+    used = jnp.stack([t.used for t in wt.tables])
+    max_probe = jnp.stack(
+        [jnp.asarray(t.max_probe, jnp.int32) for t in wt.tables]
+    )
+    rh = jnp.stack(list(wt.right_hist))
+    lh = jnp.stack(list(wt.left_hist))
+    has_target = target_hi is not None
+    if has_target:
+        assert seed_len > 0, "target walk needs seed_len > 0"
+    else:
+        seed_len = 0
+        target_hi = jnp.zeros_like(start_hi)
+        target_lo = jnp.zeros_like(start_lo)
+    E = start_hi.shape[0]
+    args = [start_hi, start_lo, jnp.asarray(contig, jnp.int32),
+            jnp.asarray(active, bool), target_hi, target_lo]
+    kw = dict(mer_sizes=tuple(mer_sizes), tag_bits=tag_bits, max_ext=max_ext,
+              min_votes=min_votes, dominance=dominance, seed_len=seed_len)
+    if b == "ref":
+        return ref.mer_walk_ref(*args, keys_hi, keys_lo, used, max_probe,
+                                rh, lh, **kw)
+    pad = (-E) % BLOCK_WALKERS
+    if pad:
+        zeros = lambda x: jnp.zeros((pad,), x.dtype)
+        args = [jnp.concatenate([x, zeros(x)]) for x in args]
+    out = _mw.mer_walk(*args, keys_hi, keys_lo, used, max_probe, rh, lh,
+                       interpret=_interpret(), **kw)
+    if pad:
+        out = MerWalkOut(*(x[:E] for x in out))
+    return out
 
 
 def kmer_hash(hi, lo):

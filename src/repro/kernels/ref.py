@@ -11,10 +11,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import kmer
+from repro.core import dht, kmer
 from repro.core.types import INVALID_BASE
 
 from .kmer_extract import KmerLanes
+from .mer_walk import ACTIVE, BUF_K, DEADEND, DONE, FORK, HIT, MerWalkOut
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -42,6 +43,149 @@ def kmer_extract_ref(bases, lengths, *, k: int) -> KmerLanes:
         flip=jnp.pad(flip, pad),
         valid=jnp.pad(valid, pad),
     )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mer_sizes", "tag_bits", "max_ext", "min_votes",
+                     "dominance", "seed_len"),
+)
+def mer_walk_ref(
+    start_hi,
+    start_lo,
+    contig,
+    active,
+    target_hi,
+    target_lo,
+    keys_hi,
+    keys_lo,
+    used,
+    max_probe,
+    right_hist,
+    left_hist,
+    *,
+    mer_sizes: tuple,
+    tag_bits: int,
+    max_ext: int,
+    min_votes: int = 1,
+    dominance: int = 4,
+    seed_len: int = 0,
+) -> MerWalkOut:
+    """Oracle for kernels.mer_walk: the pre-fusion lax.while_loop walk.
+
+    This IS the historical `core.local_assembly.mer_walk` body (per-step
+    full-set jnp gathers through `core.dht.lookup` and the `core.kmer`
+    codec), extended with the inline target-seed check the fused kernel
+    performs for gap closing, and kept BIT-identical to the Pallas kernel
+    (tests/test_walk_parity.py).  It takes the same stacked per-rung table
+    arrays as the kernel so both backends see one normal form.
+    """
+    E = start_hi.shape[0]
+    n_rungs = len(mer_sizes)
+    mid_rung = n_rungs // 2
+    tables = [
+        dht.HashTable(slot_hi=keys_hi[r], slot_lo=keys_lo[r], used=used[r],
+                      max_probe=max_probe[r])
+        for r in range(n_rungs)
+    ]
+
+    def suffix(buf_hi, buf_lo, m: int):
+        mask_lo, mask_hi = kmer._masks(m)
+        return buf_hi & mask_hi, buf_lo & mask_lo
+
+    def query_rung(r: int, m: int, buf_hi, buf_lo, act):
+        mhi, mlo = suffix(buf_hi, buf_lo, m)
+        chi, clo, flip = kmer.canonical(mhi, mlo, k=m)
+        thi, tlo = kmer.embed_tag(chi, clo, contig, k=m, tag_bits=tag_bits)
+        slots = dht.lookup(tables[r], thi, tlo, act)
+        ok = slots >= 0
+        s = jnp.clip(slots, 0)
+        rsel = right_hist[r][s]
+        lsel = left_hist[r][s]
+        hist = jnp.where(flip[:, None], lsel[:, ::-1], rsel)
+        return jnp.where(ok[:, None] & act[:, None], hist, 0)
+
+    def choose(hist):
+        c1 = hist.max(axis=-1)
+        b1 = hist.argmax(axis=-1).astype(jnp.uint8)
+        viable = (hist >= min_votes).sum(axis=-1)
+        total = hist.sum(axis=-1)
+        second = total - c1
+        uncontested = (viable == 1) & (c1 >= min_votes)
+        dominated = (viable > 1) & (c1 >= dominance * jnp.maximum(second, 1)) & (
+            c1 >= min_votes + 1
+        )
+        accept = uncontested | dominated
+        deadend = viable == 0
+        kind = jnp.where(accept, 0, jnp.where(deadend, 1, 2))
+        return b1, kind
+
+    def cond(state):
+        _, _, _, _, status, steps, _, _, _, _ = state
+        return jnp.any(status == ACTIVE) & (steps < max_ext)
+
+    def body(state):
+        (buf_hi, buf_lo, rung, last_shift, status, steps, out, out_len,
+         hit, hit_pos) = state
+        act = status == ACTIVE
+        hists = jnp.stack(
+            [query_rung(r, mer_sizes[r], buf_hi, buf_lo, act)
+             for r in range(n_rungs)],
+            axis=1,
+        )
+        hist = jnp.take_along_axis(
+            hists, rung[:, None, None].astype(jnp.int32), axis=1
+        )[:, 0]
+        base, kind = choose(hist)
+        at_top = rung == n_rungs - 1
+        at_bottom = rung == 0
+        stop_fork = act & (kind == 2) & (at_top | (last_shift == -1))
+        stop_dead = act & (kind == 1) & (at_bottom | (last_shift == +1))
+        upshift = act & (kind == 2) & ~stop_fork
+        downshift = act & (kind == 1) & ~stop_dead
+        accept = act & (kind == 0)
+        rung = jnp.clip(rung + upshift.astype(jnp.int32)
+                        - downshift.astype(jnp.int32), 0, n_rungs - 1)
+        last_shift = jnp.where(
+            upshift, 1, jnp.where(downshift, -1,
+                                  jnp.where(accept, 0, last_shift))
+        )
+        nhi, nlo = kmer.append_base(buf_hi, buf_lo, base, k=BUF_K)
+        buf_hi = jnp.where(accept, nhi, buf_hi)
+        buf_lo = jnp.where(accept, nlo, buf_lo)
+        sel = jnp.clip(out_len, 0, max_ext - 1)
+        out = out.at[jnp.arange(E), sel].set(
+            jnp.where(accept, base, out[jnp.arange(E), sel])
+        )
+        out_len = out_len + accept.astype(jnp.int32)
+        status = jnp.where(stop_fork, FORK,
+                           jnp.where(stop_dead, DEADEND, status))
+        if seed_len > 0:
+            shi, slo = suffix(buf_hi, buf_lo, seed_len)
+            match = accept & (shi == target_hi) & (slo == target_lo) & ~hit
+            hit_pos = jnp.where(match, out_len, hit_pos)
+            hit = hit | match
+            status = jnp.where(match, HIT, status)
+        return (buf_hi, buf_lo, rung, last_shift, status, steps + 1, out,
+                out_len, hit, hit_pos)
+
+    init = (
+        start_hi,
+        start_lo,
+        jnp.full((E,), mid_rung, jnp.int32),
+        jnp.zeros((E,), jnp.int32),
+        jnp.where(active, ACTIVE, DONE),
+        jnp.int32(0),
+        jnp.full((E, max_ext), 4, jnp.uint8),
+        jnp.zeros((E,), jnp.int32),
+        jnp.zeros((E,), bool),
+        jnp.full((E,), -1, jnp.int32),
+    )
+    (_, _, _, _, status, _, out, out_len, hit, hit_pos) = jax.lax.while_loop(
+        cond, body, init
+    )
+    return MerWalkOut(ext_bases=out, ext_len=out_len, status=status, hit=hit,
+                      hit_pos=hit_pos)
 
 
 @functools.partial(jax.jit, static_argnames=("band", "match", "mismatch", "gap"))

@@ -130,7 +130,8 @@ def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
         if plan.run_local_assembly:
             old_total = int(jnp.where(alive, contigs.lengths, 0).sum())
             contigs, _walk = local_assembly.extend_with_tables(
-                wt, contigs, alive, mer_sizes=mer_sizes, max_ext=plan.max_ext
+                wt, contigs, alive, mer_sizes=mer_sizes,
+                max_ext=plan.max_ext, backend=plan.kernel_backend,
             )
             ext_bases = (
                 int(jnp.where(alive, contigs.lengths, 0).sum()) - old_total
@@ -181,6 +182,7 @@ def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
         seed_len=min(k_last, 25),
         mer_sizes=gap_mers,
         max_scaffold_len=plan.max_scaffold_len,
+        backend=plan.kernel_backend,
     )
     return {
         "contigs": contigs,
