@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.check_regression \\
         [--baseline-dir benchmarks/baselines] [--out-dir $BENCH_OUT] \\
-        [--tolerance 1.25]
+        [--tolerance 1.25] [--only serving,kernels]
 
 Each baseline file `benchmarks/baselines/BENCH_<name>.json` pins the gated
 subset of a bench's `derived` scalars:
@@ -42,13 +42,27 @@ def _load(path: str) -> dict:
         return json.load(f)
 
 
-def check(baseline_dir: str, out_dir: str, tolerance: float) -> list:
-    """Returns a list of human-readable failure strings (empty = pass)."""
+def check(baseline_dir: str, out_dir: str, tolerance: float,
+          only=None) -> list:
+    """Returns a list of human-readable failure strings (empty = pass).
+
+    `only` restricts the gate to the named benches (e.g. a CI job that
+    runs a single bench gates just that record); a name with no baseline
+    fails rather than passing vacuously.
+    """
     failures = []
     baseline_paths = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
     if not baseline_paths:
         return [f"no baselines found under {baseline_dir!r} — the gate "
                 f"would pass vacuously; seed baselines first"]
+    if only:
+        by_name = {os.path.basename(p)[len("BENCH_"):-len(".json")]: p
+                   for p in baseline_paths}
+        missing = sorted(set(only) - set(by_name))
+        if missing:
+            return [f"--only names {missing} have no baseline under "
+                    f"{baseline_dir!r}; known: {sorted(by_name)}"]
+        baseline_paths = [by_name[n] for n in sorted(only)]
     for bpath in baseline_paths:
         base = _load(bpath)
         name = base.get("name") or os.path.basename(bpath)[len("BENCH_"):-len(".json")]
@@ -114,11 +128,15 @@ def main() -> None:
     ap.add_argument("--tolerance", type=float, default=1.25,
                     help="default max_ratio for gated metrics (1.25 = "
                          "fail on >25%% regression)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench names to gate (default: "
+                         "every baseline)")
     args = ap.parse_args()
     from . import record
 
     out_dir = args.out_dir or record.out_dir()
-    failures = check(args.baseline_dir, out_dir, args.tolerance)
+    only = set(filter(None, args.only.split(","))) or None
+    failures = check(args.baseline_dir, out_dir, args.tolerance, only=only)
     if failures:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
         for f in failures:

@@ -28,13 +28,14 @@ def main() -> None:
     run_started = time.time()
     benches = {}
     from . import bench_kernels, bench_quality, bench_localization, \
-        bench_scaling, bench_weak_scaling
+        bench_scaling, bench_serving, bench_weak_scaling
 
     benches["kernels"] = bench_kernels.main          # §IV-C hot path
     benches["quality"] = bench_quality.main          # Table I
     benches["localization"] = bench_localization.main  # Fig 3
     benches["scaling"] = bench_scaling.main          # Fig 4/5
     benches["weak_scaling"] = bench_weak_scaling.main  # Table II
+    benches["serving"] = bench_serving.main          # job-server throughput
 
     if only:
         unknown = only - set(benches)

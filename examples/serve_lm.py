@@ -5,7 +5,7 @@
 import jax
 
 from repro.models import registry
-from repro.serving.serve import Engine, ServeConfig
+from repro.models.decode_engine import Engine, ServeConfig
 
 
 def main():

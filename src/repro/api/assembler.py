@@ -79,6 +79,30 @@ def contig_stage(kset, k: int, plan: AssemblyPlan):
     return contigs, prn.alive, trav, bub, prn
 
 
+#: Ordered stage labels of the staged-assembly event protocol.  Every
+#: event yielded by the `*_iter` generators is `(stage, info)` with
+#: `stage` drawn from this tuple — the same per-stage shape the serving
+#: job workflow declares capacity for (DESIGN.md §9).
+STAGES = ("analyze", "contig_rounds", "align", "scaffold")
+
+
+def drive(gen, hook=None):
+    """Drain a staged-assembly generator; forward each event to `hook`.
+
+    `hook(stage, info)` is the cancellation/pause seam: it runs between
+    contig rounds and between streamed batches, and may raise to abort
+    the run at that boundary (the serving layer raises its job-control
+    exceptions here).  Returns the generator's return value.
+    """
+    while True:
+        try:
+            stage, info = next(gen)
+        except StopIteration as stop:
+            return stop.value
+        if hook is not None:
+            hook(stage, info)
+
+
 class Assembler:
     """One entry point; execution strategy comes from the context."""
 
@@ -116,8 +140,11 @@ class Assembler:
         )
         return contigs, alive, al, stats
 
-    def contig_rounds(self, reads, *, prev=None):
-        """Algorithm 1: iterate k over the plan's schedule."""
+    def contig_rounds_iter(self, reads, *, prev=None):
+        """Generator twin of `contig_rounds`: yields a
+        ("contig_rounds", info) event after every completed k-round, so a
+        caller (the serving scheduler) can interleave, pause, or cancel
+        between rounds.  Returns (contigs, alive, al, stats)."""
         self.ctx.prepare(reads, self.plan)
         contigs = alive = al = None
         all_stats = []
@@ -125,18 +152,27 @@ class Assembler:
             contigs, alive, al, stats = self._round(k, prev)
             all_stats.append(stats)
             prev = (contigs, alive)
+            yield "contig_rounds", {"k": k, "n_contigs": stats.n_contigs}
         return contigs, alive, al, all_stats
+
+    def contig_rounds(self, reads, *, prev=None, hook=None):
+        """Algorithm 1: iterate k over the plan's schedule."""
+        return drive(self.contig_rounds_iter(reads, prev=prev), hook)
 
     # ---- Algorithm 1 + Algorithm 3 ----
 
-    def assemble(self, reads, hmm_hit=None) -> dict:
-        """Full pipeline.  Returns the same result dict as the historical
-        `core.pipeline.assemble` plus the plan and overflow accounting."""
+    def assemble_iter(self, reads, hmm_hit=None):
+        """Generator twin of `assemble`: yields (stage, info) events at
+        every stage boundary (between contig rounds, after the final
+        alignment, after scaffolding) and returns the result dict.  The
+        serving job scheduler drives jobs through this protocol one event
+        at a time; `assemble` drains it in one go."""
         plan, ctx = self.plan, self.ctx
-        contigs, alive, _, stats = self.contig_rounds(reads)
+        contigs, alive, _, stats = yield from self.contig_rounds_iter(reads)
         # fresh alignment against the final contigs (Alg. 3 line 3)
         k_last = plan.ks()[-1]
         al = ctx.align(contigs, alive, k_last)
+        yield "align", {"k": k_last}
         ea, eb, gap, valid, is_splint = ctx.link_candidates(al, contigs, alive)
         links = scaffolding.links_from_candidates(
             ea, eb, gap, valid, is_splint, alive,
@@ -146,6 +182,7 @@ class Assembler:
             links, contigs, alive, float(reads.insert_size),
             max_members=plan.max_members, hmm_hit=hmm_hit,
         )
+        yield "scaffold", {"n_links": int(links.valid.sum())}
         # gap closing walks consume the original read set (mates are global
         # there; DESIGN.md §3.3) on both contexts
         aln0 = al.contig[:, 0][: reads.num_reads]
@@ -174,10 +211,34 @@ class Assembler:
             "overflow": ctx.overflow(),
         }
 
+    def assemble(self, reads, hmm_hit=None, *, hook=None) -> dict:
+        """Full pipeline.  Returns the same result dict as the historical
+        `core.pipeline.assemble` plus the plan and overflow accounting.
+
+        `hook(stage, info)` — optional cancellation/pause hook, called
+        between contig rounds and at stage boundaries; it may raise to
+        abort the run at that boundary (see `drive`).
+        """
+        return drive(self.assemble_iter(reads, hmm_hit), hook)
+
     # ---- out-of-core execution (DESIGN.md §7) ----
 
+    def assemble_stream_iter(self, batches, hmm_hit=None, *,
+                             checkpoint_dir: Optional[str] = None):
+        """Generator twin of `assemble_stream`: yields (stage, info)
+        events between streamed batches, after each per-k analysis, and
+        at every stage boundary; returns the result dict (see
+        `repro.stream.driver.iter_assemble_stream`)."""
+        from repro.stream import driver
+
+        return driver.iter_assemble_stream(
+            self.plan, self.ctx, batches, hmm_hit=hmm_hit,
+            checkpoint_dir=checkpoint_dir,
+        )
+
     def assemble_stream(self, batches, hmm_hit=None, *,
-                        checkpoint_dir: Optional[str] = None) -> dict:
+                        checkpoint_dir: Optional[str] = None,
+                        hook=None) -> dict:
         """Full pipeline over a re-iterable source of fixed-shape batches.
 
         The out-of-core twin of `assemble`: same algorithms, same result
@@ -188,11 +249,13 @@ class Assembler:
         (repro.stream.driver).  Size the plan with
         `AssemblyPlan.from_stream`, whose memory bill is independent of
         total read count.  `checkpoint_dir` enables batch-boundary
-        checkpoint/resume of the streaming analysis state.
+        checkpoint/resume of the streaming analysis state.  `hook` is the
+        between-rounds/between-batches cancellation/pause hook (see
+        `drive`).
         """
-        from repro.stream import driver
-
-        return driver.assemble_stream(
-            self.plan, self.ctx, batches, hmm_hit=hmm_hit,
-            checkpoint_dir=checkpoint_dir,
+        return drive(
+            self.assemble_stream_iter(
+                batches, hmm_hit, checkpoint_dir=checkpoint_dir
+            ),
+            hook,
         )

@@ -84,6 +84,15 @@ class ExecutionContext:
 
         return os.path.join(base, f"k{k}")
 
+    def spawn(self) -> "ExecutionContext":
+        """A fresh context of the same kind sharing the expensive device
+        resources (the jax mesh, for Mesh) but NONE of the per-run state
+        (bound plan, checkpoint dir, overflow counters).  The job server
+        multiplexes many runs onto one set of devices; each run must get
+        its own spawn or interleaved runs would clobber each other's
+        bindings."""
+        raise NotImplementedError
+
     def overflow(self) -> dict:
         """Accumulated overflow counts (reported, never dropped: §3.4)."""
         return dict(self._overflow)
@@ -105,6 +114,9 @@ class Local(ExecutionContext):
 
     def __init__(self):
         self._reset_overflow()
+
+    def spawn(self) -> "Local":
+        return Local()
 
     def prepare(self, reads, plan) -> None:
         self.reads = reads
@@ -236,6 +248,11 @@ class Mesh(ExecutionContext):
 
             self._mesh = dist.data_mesh(self.num_shards)
         return self._mesh
+
+    def spawn(self) -> "Mesh":
+        # share the built jax device mesh (the expensive part); per-run
+        # bindings (plan, sharded reads, checkpoints, overflow) start fresh
+        return Mesh(num_shards=self.num_shards, mesh=self.mesh)
 
     def _adapt_plan(self, plan, constructor: str):
         """Validate/re-derive a plan for this mesh width (shared by the

@@ -1,0 +1,124 @@
+"""Batched token decoding: prefill + decode loop with continuous batching.
+
+Relocated from `repro.serving.serve` (which now hosts the assembly job
+server; this engine serves the LLM half of the repo).  The serve step —
+one token for the whole batch against the sharded KV/SSM state — is the
+unit the dry-run lowers for the decode cells; this module wraps it into a
+usable loop for the examples: greedy/temperature sampling, per-sequence
+stop handling, and slot recycling (a freed slot accepts the next queued
+request — continuous batching in its simplest correct form).
+
+Admission is *masked*: the decode state is one batch-wide cache with a
+single shared write position, so a newly admitted request's prompt cannot
+be stepped through on its own — every `decode_step` advances EVERY slot's
+cache.  The engine therefore never steps the batch outside the main loop;
+a new request's prompt tokens feed through the shared loop one per step,
+isolated to that slot's row, while live slots keep decoding their own
+streams.  (The old `_admit` ran a private prefill loop over the whole
+batch, stepping live slots with their stale `cur_token` and discarding
+the logits — every mid-decode admission polluted the other slots' caches
+with duplicate entries and desynchronized their stream positions; the
+regression test asserts an undisturbed slot's output is bit-identical
+with and without a mid-decode admission.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    temperature: float = 0.0
+    eos_token: int = 0
+    state_dtype: object = jnp.float32
+
+
+class Engine:
+    """Single-host serving engine over the model's decode_step."""
+
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig,
+                 batch_slots: int = 8):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        self.fns = registry.model_fns(cfg)
+        self.slots = batch_slots
+        self.state = self.fns["init_decode_state"](
+            cfg, batch_slots, serve_cfg.max_len, dtype=serve_cfg.state_dtype
+        )
+        self._step = jax.jit(
+            lambda p, s, t: self.fns["decode_step"](cfg, p, s, t)
+        )
+        # slot bookkeeping (host side)
+        self.live = np.zeros(batch_slots, bool)
+        self.outputs: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.queue: List[List[int]] = []
+        self.cur_token = np.zeros((batch_slots, 1), np.int32)
+        # prompt tokens not yet fed; consumed one per decode step while
+        # the slot is in its prefill phase (logits ignored until empty)
+        self.pending: List[List[int]] = [[] for _ in range(batch_slots)]
+
+    def submit(self, prompt_tokens: List[int]):
+        self.queue.append(list(prompt_tokens))
+
+    def _admit(self):
+        """Assign queued requests to free slots.  Host bookkeeping only —
+        no decode_step runs here (see the module docstring): the prompt
+        feeds through the shared loop, so other live slots' caches and
+        `cur_token` stream positions are untouched by admission."""
+        for s in range(self.slots):
+            if not self.live[s] and self.queue:
+                prompt = self.queue.pop(0) or [0]
+                self.live[s] = True
+                self.outputs[s] = []
+                self.cur_token[s, 0] = prompt[0]
+                self.pending[s] = list(prompt[1:])
+
+    def run(self, max_new_tokens: int = 32) -> List[List[int]]:
+        """Decode until all live sequences stop or budget is exhausted.
+
+        `max_new_tokens` bounds batch steps; a slot admitted mid-run
+        spends its first len(prompt) steps in prefill (logits ignored)
+        before it starts emitting.
+        """
+        self._admit()
+        key = jax.random.PRNGKey(0)
+        for _ in range(max_new_tokens):
+            if not self.live.any():
+                break
+            logits, self.state = self._step(
+                self.params, self.state, jnp.asarray(self.cur_token)
+            )
+            lg = logits[:, -1]
+            if self.scfg.temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, lg / self.scfg.temperature, axis=-1
+                )
+            else:
+                nxt = jnp.argmax(lg, axis=-1)
+            nxt = np.asarray(nxt, np.int32)
+            for s in range(self.slots):
+                if not self.live[s]:
+                    continue
+                if self.pending[s]:
+                    # prefill: feed the next prompt token, ignore logits
+                    self.cur_token[s, 0] = self.pending[s].pop(0)
+                    continue
+                self.outputs[s].append(int(nxt[s]))
+                self.cur_token[s, 0] = int(nxt[s])
+                if int(nxt[s]) == self.scfg.eos_token and len(
+                    self.outputs[s]
+                ) > 1:
+                    self.live[s] = False
+                    self._admit()
+        return self.outputs

@@ -1,99 +1,21 @@
-"""Batched serving: prefill + decode loop with continuous batching hooks.
+"""Deprecated location of the token-decode serving engine.
 
-The serve_step (one token for the whole batch against the sharded KV/SSM
-state) is the unit the dry-run lowers for the decode cells; this module
-wraps it into a usable loop for the examples: greedy/temperature sampling,
-per-sequence stop handling, and slot recycling (a freed slot accepts the
-next queued request — continuous batching in its simplest correct form).
+The LLM decode engine lives in `repro.models.decode_engine` now;
+`repro.serving` hosts the assembly job server (DESIGN.md §9).  This
+module re-exports the old names so existing imports keep working.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, List, Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.models.decode_engine import Engine, ServeConfig
 
-from repro.configs.base import ArchConfig
-from repro.models import registry
+warnings.warn(
+    "repro.serving.serve is deprecated: the token-decode Engine moved to "
+    "repro.models.decode_engine (repro.serving now hosts the assembly "
+    "job server)",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
-
-@dataclasses.dataclass
-class ServeConfig:
-    max_len: int = 256
-    temperature: float = 0.0
-    eos_token: int = 0
-    state_dtype: object = jnp.float32
-
-
-class Engine:
-    """Single-host serving engine over the model's decode_step."""
-
-    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig,
-                 batch_slots: int = 8):
-        self.cfg = cfg
-        self.params = params
-        self.scfg = serve_cfg
-        self.fns = registry.model_fns(cfg)
-        self.slots = batch_slots
-        self.state = self.fns["init_decode_state"](
-            cfg, batch_slots, serve_cfg.max_len, dtype=serve_cfg.state_dtype
-        )
-        self._step = jax.jit(
-            lambda p, s, t: self.fns["decode_step"](cfg, p, s, t)
-        )
-        # slot bookkeeping (host side)
-        self.live = np.zeros(batch_slots, bool)
-        self.outputs: List[List[int]] = [[] for _ in range(batch_slots)]
-        self.queue: List[List[int]] = []
-        self.cur_token = np.zeros((batch_slots, 1), np.int32)
-
-    def submit(self, prompt_tokens: List[int]):
-        self.queue.append(list(prompt_tokens))
-
-    def _admit(self):
-        for s in range(self.slots):
-            if not self.live[s] and self.queue:
-                prompt = self.queue.pop(0)
-                # prefill by stepping the prompt through the cache
-                for t in prompt:
-                    tok = jnp.asarray(self.cur_token)
-                    tok = tok.at[s, 0].set(t)
-                    # note: single-slot prefill steps the whole batch; fine
-                    # for the example scale, batched prefill is the obvious
-                    # production extension
-                    _, self.state = self._step(self.params, self.state, tok)
-                self.live[s] = True
-                self.outputs[s] = []
-                self.cur_token[s, 0] = prompt[-1] if prompt else 0
-
-    def run(self, max_new_tokens: int = 32) -> List[List[int]]:
-        """Decode until all live sequences stop or budget is exhausted."""
-        self._admit()
-        key = jax.random.PRNGKey(0)
-        for _ in range(max_new_tokens):
-            if not self.live.any():
-                break
-            logits, self.state = self._step(
-                self.params, self.state, jnp.asarray(self.cur_token)
-            )
-            lg = logits[:, -1]
-            if self.scfg.temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(
-                    sub, lg / self.scfg.temperature, axis=-1
-                )
-            else:
-                nxt = jnp.argmax(lg, axis=-1)
-            nxt = np.asarray(nxt, np.int32)
-            for s in range(self.slots):
-                if self.live[s]:
-                    self.outputs[s].append(int(nxt[s]))
-                    self.cur_token[s, 0] = int(nxt[s])
-                    if int(nxt[s]) == self.scfg.eos_token and len(
-                        self.outputs[s]
-                    ) > 1:
-                        self.live[s] = False
-                        self._admit()
-        return self.outputs
+__all__ = ["Engine", "ServeConfig"]

@@ -26,6 +26,7 @@ from .batches import (
 from .analysis import (
     StreamCheckpoint,
     StreamStats,
+    job_checkpoint_dir,
     sharded_streaming_kmer_analysis,
     streaming_kmer_analysis,
 )
@@ -36,6 +37,7 @@ __all__ = [
     "StreamStats",
     "batches_from_readset",
     "check_batch_shapes",
+    "job_checkpoint_dir",
     "pad_batch",
     "require_reiterable",
     "sharded_streaming_kmer_analysis",

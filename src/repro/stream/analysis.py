@@ -96,6 +96,22 @@ class StreamCheckpoint:
         self.ck.wait()
 
 
+def job_checkpoint_dir(root: str, job: str) -> str:
+    """Stable per-job streaming-checkpoint directory under `root`.
+
+    The serving layer gives every job its own checkpoint namespace so two
+    concurrent jobs (or a resubmitted one) never share `StreamCheckpoint`
+    state: the job name is slugged to a filesystem-safe form and suffixed
+    with a CRC of the raw name, so distinct names that slug identically
+    ("job/a" vs "job:a") still map to distinct directories.  The per-k
+    subdirectories under it come from `ExecutionContext._kmer_ckpt_dir`.
+    """
+    import os
+
+    slug = "".join(c if c.isalnum() or c in "-_" else "_" for c in job)[:64]
+    return os.path.join(root, f"{slug}-{zlib.crc32(job.encode()):08x}")
+
+
 def _fingerprint(batches, **params) -> np.uint32:
     """CRC of the analysis parameters + the first batch's content.
 

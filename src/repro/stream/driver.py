@@ -47,14 +47,17 @@ def _concat_alignments(parts):
 
 def _align_and_tables(ctx, batches, contigs, sidx, seed_len, *,
                       wt=None, mer_sizes=None, tag_bits=None,
-                      witnesses=None, clens=None, backend=None):
+                      witnesses=None, clens=None, backend=None,
+                      stage="align", info=None):
     """One pass over the batches: align each, optionally fold walk tables
-    and link witnesses.  Returns (alignments, wt, witness arrays, counts)."""
+    and link witnesses.  A generator: yields a `(stage, info)` event after
+    every batch (the serving layer's pause/cancel boundary) and returns
+    (alignments, wt, witness arrays, counts) — consume via `yield from`."""
     parts = []
     wit = []
     aligned = 0
     valid_rows = 0
-    for batch in batches:
+    for i, batch in enumerate(batches):
         al_b = ctx.align_batch(batch, contigs, sidx, seed_len)
         parts.append(al_b)
         aln0 = al_b.contig[:, 0]
@@ -68,6 +71,7 @@ def _align_and_tables(ctx, batches, contigs, sidx, seed_len, *,
             )
         if witnesses is not None:
             wit.append(scaffolding.candidate_links(al_b, batch, clens))
+        yield stage, {**(info or {}), "batch": i}
     al = _concat_alignments(parts)
     if witnesses is not None:
         wit = tuple(
@@ -78,8 +82,29 @@ def _align_and_tables(ctx, batches, contigs, sidx, seed_len, *,
 
 
 def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
-                    checkpoint_dir=None) -> dict:
+                    checkpoint_dir=None, hook=None) -> dict:
     """Full out-of-core pipeline over a re-iterable batch source."""
+    from repro.api.assembler import drive
+
+    return drive(
+        iter_assemble_stream(plan, ctx, batches, hmm_hit=hmm_hit,
+                             checkpoint_dir=checkpoint_dir),
+        hook,
+    )
+
+
+def iter_assemble_stream(plan, ctx, batches, *, hmm_hit=None,
+                         checkpoint_dir=None):
+    """Generator form of the out-of-core pipeline (staged workflow).
+
+    Yields `(stage, info)` events — stage is one of
+    `repro.api.assembler.STAGES` — after each per-k streamed analysis
+    ("analyze"), after every aligned batch and completed round
+    ("contig_rounds"), after every batch of the final alignment pass
+    ("align"), and after link aggregation ("scaffold"); returns the
+    result dict.  These boundaries are where the serving scheduler
+    interleaves concurrent jobs and where pause/cancel takes effect.
+    """
     from repro.api.assembler import IterationStats, contig_stage
     from repro.api.plan import PlanError
 
@@ -103,6 +128,7 @@ def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
     for k in plan.ks():
         kset, kovf, sstats = ctx.stream_kmer_set(k, batches, prev)
         stream_stats[k] = sstats
+        yield "analyze", {"k": k, "batches": sstats.batches_pass2}
         contigs, alive, trav, bub, prn = contig_stage(kset, k, plan)
         seed_len = min(k, 27)
         sidx = alignment.build_seed_index(
@@ -117,10 +143,11 @@ def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
             wt = local_assembly.empty_walk_tables(
                 mer_sizes=mer_sizes, capacity=plan.walk_capacity
             )
-        al, wt, _, (aligned, valid_rows) = _align_and_tables(
+        al, wt, _, (aligned, valid_rows) = yield from _align_and_tables(
             ctx, batches, contigs, sidx, seed_len,
             wt=wt, mer_sizes=mer_sizes, tag_bits=tag_bits,
             backend=plan.kernel_backend,
+            stage="contig_rounds", info={"k": k},
         )
         if insert_size is None:
             for batch in batches:
@@ -149,6 +176,7 @@ def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
             route_overflow=int(kovf.get("route", 0)),
         ))
         prev = (contigs, alive)
+        yield "contig_rounds", {"k": k, "n_contigs": int(alive.sum())}
 
     # ---- Algorithm 3 over the final contigs ----
     k_last = plan.ks()[-1]
@@ -163,10 +191,11 @@ def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
         mer_sizes=gap_mers, capacity=plan.walk_capacity
     )
     clens = jnp.where(alive, contigs.lengths, 0)
-    al, wt_gap, cands, _ = _align_and_tables(
+    al, wt_gap, cands, _ = yield from _align_and_tables(
         ctx, batches, contigs, sidx, seed_len,
         wt=wt_gap, mer_sizes=gap_mers, tag_bits=gap_tag_bits,
         witnesses=True, clens=clens, backend=plan.kernel_backend,
+        stage="align", info={"k": k_last},
     )
     ea, eb, gap, valid, is_splint = cands
     links = scaffolding.links_from_candidates(
@@ -177,6 +206,7 @@ def assemble_stream(plan, ctx, batches, *, hmm_hit=None,
         links, contigs, alive, float(insert_size),
         max_members=plan.max_members, hmm_hit=hmm_hit,
     )
+    yield "scaffold", {"n_links": int(links.valid.sum())}
     seqs = gap_closing.close_and_render_with_tables(
         scaffs, contigs, wt_gap,
         seed_len=min(k_last, 25),

@@ -239,3 +239,67 @@ def test_plan_from_copies_every_knob():
         assert getattr(plan, f.name) == getattr(cfg, f.name), f.name
     assert plan.ks() == cfg.ks()
     assert plan.ladder(21) == cfg.ladder(21)
+
+
+# ---------------------------------------------------------------------------
+# stage_bytes edge cases (the admission-control price list)
+# ---------------------------------------------------------------------------
+
+
+def test_stage_bytes_unbound_plan_prices_only_static_buffers():
+    """No dataset shape: read-proportional buffers are 0, capacity-sized
+    buffers still price in — an unbound plan is a lower bound, not free."""
+    plan = AssemblyPlan()
+    sb = plan.stage_bytes()
+    assert sb["kmer_occurrences"] == 0
+    assert sb["alignments"] == 0
+    assert sb["kmer_tables"] > 0 and sb["contigs"] > 0
+    assert plan.bytes() == sum(sb.values()) > 0
+
+
+def test_stage_bytes_tiny_dataset_monotone():
+    """Binding even a tiny dataset adds read-proportional cost, and more
+    reads never cost less (admission order must be stable under growth)."""
+    _, reads, _ = mgsim.single_genome_reads(7, genome_len=150, coverage=2)
+    plan = AssemblyPlan()
+    bound = plan.bind(reads)
+    assert bound.bytes() > plan.bytes()
+    bigger = dataclasses.replace(
+        bound, dataset_shape=(bound.dataset_shape[0] * 10,
+                              bound.dataset_shape[1])
+    )
+    for k, v in bound.stage_bytes().items():
+        assert bigger.stage_bytes()[k] >= v, k
+
+
+def test_stage_bytes_stream_plan_independent_of_total_reads():
+    """A stream plan's per-stage bill depends on batch_reads, never on
+    dataset size — the out-of-core guarantee, per stage."""
+    small = AssemblyPlan.from_stream(2048, 60, total_reads=10_000)
+    huge = AssemblyPlan.from_stream(2048, 60, total_reads=7_500_000_000)
+    assert small.stage_bytes() == huge.stage_bytes()
+    sb = small.stage_bytes()
+    assert sb["bloom_filters"] == 2 * small.bloom_slots
+    # read-proportional stages are priced at the batch, not the dataset
+    assert sb["kmer_occurrences"] > 0
+    assert sb["kmer_occurrences"] == AssemblyPlan.from_stream(
+        4096, 60).stage_bytes()["kmer_occurrences"] // 2
+
+
+def test_stage_bytes_shard_multiplicity():
+    """Sharding splits read-proportional buffers ~evenly, adds route
+    buffers, and keeps global capacities global."""
+    _, reads, _ = mgsim.single_genome_reads(7, genome_len=200, coverage=5)
+    solo = AssemblyPlan.from_dataset(reads, (17, 21, 4))
+    mesh = AssemblyPlan.from_dataset(reads, (17, 21, 4), num_shards=4)
+    s1, s4 = solo.stage_bytes(), mesh.stage_bytes()
+    assert "route_buffers" not in s1
+    assert s4["route_buffers"] > 0
+    # per-shard occurrence lanes shrink ~4x (ceil-division slack allowed)
+    assert s1["kmer_occurrences"] / s4["kmer_occurrences"] >= 3.5
+    # route buffers scale with shard count
+    s8 = AssemblyPlan.from_dataset(reads, (17, 21, 4),
+                                   num_shards=8).stage_bytes()
+    assert s8["route_buffers"] != s4["route_buffers"]
+    # every stage key is priced on both, so admission compares like to like
+    assert set(s1) | {"route_buffers"} == set(s4)

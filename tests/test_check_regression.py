@@ -1,0 +1,93 @@
+"""benchmarks.check_regression: gate semantics as plain unit tests.
+
+The gate guards CI; these tests prove it actually fires — in particular
+`min_ratio` (higher-is-better metrics like serving jobs/min), where a
+sign error would wave every throughput collapse through.
+"""
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")  # repo root, so `benchmarks` imports as a package
+
+from benchmarks.check_regression import check  # noqa: E402
+
+
+def _write(path, payload):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload))
+
+
+@pytest.fixture()
+def dirs(tmp_path):
+    base, out = tmp_path / "baselines", tmp_path / "out"
+    _write(base / "BENCH_serving.json", {
+        "name": "serving",
+        "gate": {
+            "jobs_per_min": {"value": 10.0, "min_ratio": 0.5},
+            "p95_latency_s": {"value": 4.0, "max_ratio": 1.5},
+        },
+    })
+    return base, out
+
+
+def _record(out, jobs_per_min, p95=3.0, **extra):
+    _write(out / "BENCH_serving.json", {
+        "name": "serving",
+        "derived": {"jobs_per_min": jobs_per_min, "p95_latency_s": p95},
+        **extra,
+    })
+
+
+def test_min_ratio_fails_on_throughput_regression(dirs):
+    base, out = dirs
+    _record(out, jobs_per_min=3.0)  # 3.0 < 10.0 * 0.5 — a real collapse
+    failures = check(str(base), str(out), 1.25)
+    assert len(failures) == 1
+    assert "jobs_per_min" in failures[0] and "regression" in failures[0]
+
+
+def test_min_ratio_passes_within_band(dirs):
+    base, out = dirs
+    _record(out, jobs_per_min=6.0)  # 6.0 >= 10.0 * 0.5
+    assert check(str(base), str(out), 1.25) == []
+    # faster than baseline is never a failure for a min_ratio metric
+    _record(out, jobs_per_min=40.0)
+    assert check(str(base), str(out), 1.25) == []
+
+
+def test_max_ratio_still_guards_latency(dirs):
+    base, out = dirs
+    _record(out, jobs_per_min=10.0, p95=9.0)  # 9.0 > 4.0 * 1.5
+    failures = check(str(base), str(out), 1.25)
+    assert len(failures) == 1 and "p95_latency_s" in failures[0]
+
+
+def test_missing_gated_metric_fails(dirs):
+    base, out = dirs
+    _write(out / "BENCH_serving.json",
+           {"name": "serving", "derived": {"p95_latency_s": 3.0}})
+    failures = check(str(base), str(out), 1.25)
+    assert any("jobs_per_min" in f and "missing" in f for f in failures)
+
+
+def test_missing_record_and_failed_bench_fail(dirs):
+    base, out = dirs
+    out.mkdir()
+    assert any("did not run" in f for f in check(str(base), str(out), 1.25))
+    _record(out, jobs_per_min=10.0, bench_failed=True)
+    assert any("FAILED" in f for f in check(str(base), str(out), 1.25))
+
+
+def test_only_restricts_and_rejects_unknown(dirs):
+    base, out = dirs
+    _write(base / "BENCH_other.json", {
+        "name": "other", "gate": {"t": {"value": 1.0}},
+    })
+    _record(out, jobs_per_min=10.0)
+    # gate just 'serving': the missing 'other' record must not fail
+    assert check(str(base), str(out), 1.25, only={"serving"}) == []
+    # a typo'd name fails loudly instead of passing vacuously
+    failures = check(str(base), str(out), 1.25, only={"srving"})
+    assert failures and "no baseline" in failures[0]
