@@ -1,22 +1,32 @@
-"""Kernel-vs-ref microbenchmark for the fused k-mer hot paths.
+"""Kernel-vs-ref microbenchmark for the fused hot paths.
 
-Two fused ops carry the system (DESIGN.md §8): `ops.kmer_extract` touches
-every input byte (paper §IV-C Table II), and `ops.mer_walk` is the §II-G /
-§III-D traversal that probes the walk tables base by base — MetaHipMer's
-dominant local-assembly cost at scale.  This bench times BOTH under both
-backends at pipeline-representative shapes and records µs/read and
-µs/contig-end into BENCH_kernels.json — the trajectory file the CI
-bench-smoke job gates on.
+Four fused ops carry the system (DESIGN.md §8): `ops.kmer_extract` touches
+every input byte (paper §IV-C Table II), `ops.mer_walk` is the §II-G /
+§III-D traversal that probes the walk tables base by base, `ops.seed_probe`
+is the §II-F alignment front half (seed extraction + index probe + vote),
+and the `ops.dht_insert`/`dht_lookup` pair backs every hash-table build and
+probe (§II-A).  This bench times ALL of them under both backends at
+pipeline-representative shapes and records per-unit µs into
+BENCH_kernels.json — the trajectory file the CI bench-smoke job gates on.
 
-Gated metrics: `pallas_over_ref` (extraction) and `walk_pallas_over_ref`
-(walk), the steady-state ratios of the Pallas path to the jnp ref.  The
-ratios are machine-relative (both sides run on the same host in the same
-process, reps interleaved), so they are stable across CI runners where
-raw microsecond numbers are not; an injected slowdown in either path
+Gated metrics: `pallas_over_ref` (extraction), `walk_pallas_over_ref`
+(walk), `align_pallas_over_ref` (seed probe), and `dht_pallas_over_ref`
+(insert+lookup), the steady-state ratios of the Pallas path to the jnp
+ref.  The ratios are machine-relative (both sides run on the same host in
+the same process, reps interleaved), so they are stable across CI runners
+where raw microsecond numbers are not; an injected slowdown in either path
 moves them immediately.  On CPU the Pallas kernels run in interpret mode,
 so the ratios sit above 1 — on TPU hardware the same records show the
 fusion win.  Absolute µs per backend is recorded (and loosely gated) for
 the trajectory.
+
+Accelerator mode: set REPRO_BENCH_DEVICE=tpu|gpu to record the same
+measurements as BENCH_kernels_accel.json instead — accelerator truth gets
+its own baseline (baselines/BENCH_kernels_accel.json, marked
+requires_device so CPU runners skip it) rather than inheriting
+interpret-mode ratios.  The bench refuses to run in accel mode when
+jax.default_backend() does not match: mislabeled CPU numbers would poison
+the accelerator trajectory.
 """
 from __future__ import annotations
 
@@ -33,6 +43,14 @@ SHAPES = [
 WALK_CONTIGS = 128         # 2 ends each -> 256 walkers
 WALK_MER_SIZES = (17, 21, 25)
 WALK_MAX_EXT = 64
+# alignment workload: reads seed-probing a multi-contig seed index
+ALIGN_CONTIGS = 16
+ALIGN_CHUNK = 256
+ALIGN_SEED_LEN = 21
+ALIGN_STRIDE = 16
+# dht workload: bulk insert + overfetched lookup at pipeline-ish load
+DHT_KEYS = 4096
+DHT_CAPACITY = 1 << 13
 REPS = 20
 
 
@@ -141,6 +159,126 @@ def _time_walk():
     return {b: float(np.min(ts)) for b, ts in times.items()}, E, mean_steps
 
 
+def _align_fixture():
+    """Reads + seed index over a chunked simulated genome (§II-F shape)."""
+    import jax.numpy as jnp
+
+    from repro.core import alignment
+    from repro.core.types import ContigSet
+    from repro.data import mgsim
+
+    C, chunk = ALIGN_CONTIGS, ALIGN_CHUNK
+    genome, reads, _ = mgsim.single_genome_reads(
+        23, genome_len=C * chunk, coverage=8, read_len=100
+    )
+    bases = np.full((C, chunk), 4, np.uint8)
+    for c in range(C):
+        bases[c] = np.asarray(genome)[c * chunk: (c + 1) * chunk]
+    contigs = ContigSet(
+        bases=jnp.asarray(bases),
+        lengths=jnp.full((C,), chunk, jnp.int32),
+        depths=jnp.ones((C,), jnp.float32),
+    )
+    sidx = alignment.build_seed_index(
+        contigs, jnp.ones((C,), bool), seed_len=ALIGN_SEED_LEN,
+        capacity=1 << 14,
+    )
+    positions = tuple(alignment._seed_positions(
+        reads.max_len, ALIGN_SEED_LEN, ALIGN_STRIDE
+    ))
+    return reads, sidx, positions
+
+
+def _time_align():
+    """Interleaved min-of-reps seconds per fused seed probe, both backends.
+
+    Returns ({backend: seconds}, num_reads, placed_fraction)."""
+    import jax
+
+    from repro.kernels import ops
+
+    reads, sidx, positions = _align_fixture()
+    t = sidx.table
+    args = (reads.bases, reads.lengths, t.slot_hi, t.slot_lo, t.used,
+            t.max_probe, sidx.contig, sidx.pos, sidx.flip, sidx.multi)
+    kw = dict(seed_len=ALIGN_SEED_LEN, positions=positions)
+    backends = ("pallas", "ref")
+    outs = {}
+    for b in backends:  # compile + warm both before any timing
+        outs[b] = jax.block_until_ready(ops.seed_probe(*args, backend=b, **kw))
+    # acceptance before timing: bit-identical placements, real workload
+    for i, field in enumerate(("contig", "cstart", "orient")):
+        np.testing.assert_array_equal(
+            np.asarray(outs["pallas"][i]), np.asarray(outs["ref"][i]),
+            err_msg=field,
+        )
+    placed = float((np.asarray(outs["ref"][0][:, 0]) >= 0).mean())
+    assert placed > 0.5, f"degenerate align fixture: {placed:.2%} placed"
+    times = {b: [] for b in backends}
+    for _ in range(REPS):
+        for b in backends:
+            t0 = time.perf_counter()
+            jax.block_until_ready(ops.seed_probe(*args, backend=b, **kw))
+            times[b].append(time.perf_counter() - t0)
+    R = int(reads.bases.shape[0])
+    return {b: float(np.min(ts)) for b, ts in times.items()}, R, placed
+
+
+def _time_dht():
+    """Interleaved min-of-reps seconds per insert+lookup, both backends.
+
+    One timed unit = bulk-insert DHT_KEYS keys into an empty table, then
+    look up 2x DHT_KEYS queries (half present, half absent) — the §II-A
+    use-case-1 traffic pattern.  Returns ({backend: seconds}, keys)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import dht
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(7)
+    N, cap = DHT_KEYS, DHT_CAPACITY
+    hi = jnp.asarray(rng.integers(0, 1 << 30, N).astype(np.uint32))
+    lo = jnp.asarray(rng.integers(0, 1 << 32, N).astype(np.uint32))
+    valid = jnp.ones((N,), bool)
+    qhi = jnp.concatenate(
+        [hi, jnp.asarray(rng.integers(0, 1 << 30, N).astype(np.uint32))]
+    )
+    qlo = jnp.concatenate(
+        [lo, jnp.asarray(rng.integers(0, 1 << 32, N).astype(np.uint32))]
+    )
+    empty = dht.empty_table(cap)
+    targs = (empty.slot_hi, empty.slot_lo, empty.used, empty.max_probe)
+
+    def once(b):
+        shi, slo, used, mp, slots = ops.dht_insert(
+            *targs, hi, lo, valid, backend=b
+        )
+        found = ops.dht_lookup(shi, slo, used, mp, qhi, qlo, backend=b)
+        return shi, slo, used, mp, slots, found
+
+    backends = ("pallas", "ref")
+    outs = {}
+    for b in backends:  # compile + warm both before any timing
+        outs[b] = jax.block_until_ready(once(b))
+    # acceptance before timing: bit-identical tables and probe results
+    names = ("slot_hi", "slot_lo", "used", "max_probe", "slots", "found")
+    for i, field in enumerate(names):
+        np.testing.assert_array_equal(
+            np.asarray(outs["pallas"][i]), np.asarray(outs["ref"][i]),
+            err_msg=field,
+        )
+    hit = float((np.asarray(outs["ref"][5]) >= 0).mean())
+    assert 0.3 < hit < 0.9, f"degenerate dht fixture: {hit:.2%} hit rate"
+    times = {b: [] for b in backends}
+    for _ in range(REPS):
+        for b in backends:
+            t0 = time.perf_counter()
+            jax.block_until_ready(once(b))
+            times[b].append(time.perf_counter() - t0)
+    return {b: float(np.min(ts)) for b, ts in times.items()}, N
+
+
 def run(verbose: bool = True):
     import os
 
@@ -213,23 +351,73 @@ def _run_inner(verbose: bool):
                   f"{row['us_per_call']:.0f} us/call "
                   f"({row['us_per_end']:.3f} us/contig-end, "
                   f"mean {mean_steps:.1f} accepted steps)")
+    align_secs, R_align, placed = _time_align()
+    for backend, sec in align_secs.items():
+        row = {
+            "op": "seed_probe",
+            "backend": backend, "R": R_align,
+            "seed_len": ALIGN_SEED_LEN, "stride": ALIGN_STRIDE,
+            "placed_frac": placed,
+            "us_per_call": sec * 1e6,
+            "us_per_read": sec * 1e6 / R_align,
+        }
+        rows.append(row)
+        if verbose:
+            print(f"seed_probe[{backend}] R={R_align} "
+                  f"seed_len={ALIGN_SEED_LEN} stride={ALIGN_STRIDE}: "
+                  f"{row['us_per_call']:.0f} us/call "
+                  f"({row['us_per_read']:.3f} us/read, "
+                  f"{placed:.0%} placed)")
+    dht_secs, N_keys = _time_dht()
+    for backend, sec in dht_secs.items():
+        row = {
+            "op": "dht",
+            "backend": backend, "N": N_keys, "capacity": DHT_CAPACITY,
+            "us_per_call": sec * 1e6,
+            "us_per_key": sec * 1e6 / N_keys,
+        }
+        rows.append(row)
+        if verbose:
+            print(f"dht[{backend}] N={N_keys} cap={DHT_CAPACITY}: "
+                  f"{row['us_per_call']:.0f} us/insert+lookup "
+                  f"({row['us_per_key']:.3f} us/key)")
     return rows
 
 
 def main():
+    import os
+
     import jax
 
+    bench_device = os.environ.get("REPRO_BENCH_DEVICE", "").strip().lower()
+    if bench_device:
+        if bench_device not in ("tpu", "gpu"):
+            raise SystemExit(
+                f"REPRO_BENCH_DEVICE={bench_device!r} invalid; use tpu|gpu "
+                f"(unset it for the interpret-mode kernels record)"
+            )
+        if jax.default_backend() != bench_device:
+            raise SystemExit(
+                f"REPRO_BENCH_DEVICE={bench_device} but jax is running on "
+                f"{jax.default_backend()!r} — refusing to record CPU "
+                f"numbers as accelerator truth"
+            )
     rows = run()
     ex_rows = [r for r in rows if r["op"] == "kmer_extract"]
     walk_rows = [r for r in rows if r["op"] == "mer_walk"]
-    mean_us = lambda b: float(np.mean(
-        [r["us_per_read"] for r in ex_rows if r["backend"] == b]
+    align_rows = [r for r in rows if r["op"] == "seed_probe"]
+    dht_rows = [r for r in rows if r["op"] == "dht"]
+    per = lambda rws, key, b: float(np.mean(
+        [r[key] for r in rws if r["backend"] == b]
     ))
-    walk_us = lambda b: float(np.mean(
-        [r["us_per_end"] for r in walk_rows if r["backend"] == b]
-    ))
-    pallas_us, ref_us = mean_us("pallas"), mean_us("ref")
-    wp_us, wr_us = walk_us("pallas"), walk_us("ref")
+    pallas_us = per(ex_rows, "us_per_read", "pallas")
+    ref_us = per(ex_rows, "us_per_read", "ref")
+    wp_us = per(walk_rows, "us_per_end", "pallas")
+    wr_us = per(walk_rows, "us_per_end", "ref")
+    ap_us = per(align_rows, "us_per_read", "pallas")
+    ar_us = per(align_rows, "us_per_read", "ref")
+    dp_us = per(dht_rows, "us_per_key", "pallas")
+    dr_us = per(dht_rows, "us_per_key", "ref")
     derived = {
         "pallas_us_per_read": pallas_us,
         "ref_us_per_read": ref_us,
@@ -237,6 +425,12 @@ def main():
         "walk_pallas_us_per_end": wp_us,
         "walk_ref_us_per_end": wr_us,
         "walk_pallas_over_ref": wp_us / wr_us,
+        "align_pallas_us_per_read": ap_us,
+        "align_ref_us_per_read": ar_us,
+        "align_pallas_over_ref": ap_us / ar_us,
+        "dht_pallas_us_per_key": dp_us,
+        "dht_ref_us_per_key": dr_us,
+        "dht_pallas_over_ref": dp_us / dr_us,
         "jax_backend": jax.default_backend(),
     }
     print("\nname,us_per_call,derived")
@@ -247,9 +441,19 @@ def main():
     for r in walk_rows:
         print(f"mer_walk_{r['backend']},{r['us_per_call']:.0f},"
               f"us_per_end={r['us_per_end']:.3f}")
+    for r in align_rows:
+        print(f"seed_probe_{r['backend']},{r['us_per_call']:.0f},"
+              f"us_per_read={r['us_per_read']:.3f}")
+    for r in dht_rows:
+        print(f"dht_{r['backend']},{r['us_per_call']:.0f},"
+              f"us_per_key={r['us_per_key']:.3f}")
     from . import record
 
-    record.emit("kernels", rows, derived=derived)
+    if bench_device:
+        derived["bench_device"] = bench_device
+        record.emit("kernels_accel", rows, derived=derived)
+    else:
+        record.emit("kernels", rows, derived=derived)
     return rows
 
 

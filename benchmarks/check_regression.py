@@ -25,6 +25,12 @@ Semantics per metric:
     silently stopped emitting its headline number is a regression, not a
     pass; so does a missing/stale/failed record.
 
+A baseline may carry `"requires_device": "tpu"` (or a list of device
+names): it is gated only when `jax.default_backend()` matches, and SKIPPED
+cleanly otherwise — accelerator baselines (BENCH_kernels_accel.json, the
+REPRO_BENCH_DEVICE bench mode) would fail permanently stale on every CPU
+runner without this.
+
 Baselines are deliberately explicit JSON committed to the repo: moving a
 bar is a reviewed diff, never a side effect of a lucky runner.
 """
@@ -66,6 +72,16 @@ def check(baseline_dir: str, out_dir: str, tolerance: float,
     for bpath in baseline_paths:
         base = _load(bpath)
         name = base.get("name") or os.path.basename(bpath)[len("BENCH_"):-len(".json")]
+        req = base.get("requires_device")
+        if req:
+            required = [req] if isinstance(req, str) else list(req)
+            import jax  # lazy: only device-gated baselines need it
+
+            dev = jax.default_backend()
+            if dev not in required:
+                print(f"SKIP {name}: baseline requires device "
+                      f"{'/'.join(required)}, this runner is {dev!r}")
+                continue
         gate = base.get("gate") or {}
         if not gate:
             failures.append(f"{name}: baseline {bpath} has an empty 'gate'")

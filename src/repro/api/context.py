@@ -163,6 +163,7 @@ class Local(ExecutionContext):
         return alignment.align_reads(
             self.reads, contigs, sidx, seed_len=seed_len,
             stride=self.plan.seed_stride,
+            gapped=self.plan.gapped_align,
             backend=self.plan.kernel_backend,
         )
 
@@ -220,6 +221,7 @@ class Local(ExecutionContext):
         return alignment.align_reads(
             batch, contigs, sidx, seed_len=seed_len,
             stride=self.plan.seed_stride,
+            gapped=self.plan.gapped_align,
             backend=self.plan.kernel_backend,
         )
 
@@ -337,6 +339,7 @@ class Mesh(ExecutionContext):
         return stages.sharded_align(
             self.sharded, contigs, sidx, self.mesh,
             seed_len=seed_len, stride=self.plan.seed_stride,
+            gapped=self.plan.gapped_align,
             backend=self.plan.kernel_backend,
         )
 
@@ -426,6 +429,7 @@ class Mesh(ExecutionContext):
         al = stages.sharded_align(
             sharded, contigs, sidx, self.mesh,
             seed_len=seed_len, stride=self.plan.seed_stride,
+            gapped=self.plan.gapped_align,
             backend=self.plan.kernel_backend,
         )
         B = batch.num_reads

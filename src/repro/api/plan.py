@@ -164,6 +164,12 @@ class AssemblyPlan:
     prune_beta: float = 0.5
     # --- alignment ---
     seed_stride: int = 16
+    # gapped_align: verify candidates with the banded Smith-Waterman
+    # dispatch (kernels.ops.sw_extend) instead of vectorized Hamming
+    # extension.  The default stays Hamming — the pipeline's read model is
+    # substitution-only Illumina — but indel-bearing data can opt in
+    # without touching call sites.
+    gapped_align: bool = False
     # --- kernel backend (DESIGN.md §8) ---
     # "pallas" | "ref" | None (None = the hardware-aware kernels.ops
     # default — pallas on TPU, ref elsewhere — overridable process-wide

@@ -96,7 +96,8 @@ def build_seed_index(
     nseg = fhi.shape[0]
     group_multi = jnp.zeros((nseg,), bool).at[seg].max(dup & valid_s)
     is_rep = first & valid_s
-    table, slots = dht.build(shi_s, slo_s, is_rep, capacity=capacity)
+    table, slots = dht.build(shi_s, slo_s, is_rep, capacity=capacity,
+                             backend=backend)
     cap = table.capacity
     sel = jnp.where(is_rep, slots, cap)
     contig_a = jnp.full((cap,), NONE).at[sel].set(fcid[perm], mode="drop")
@@ -117,51 +118,6 @@ def _seed_positions(read_len_max: int, seed_len: int, stride: int):
     return pos
 
 
-@functools.partial(jax.jit, static_argnames=("seed_len", "stride", "backend"))
-def _candidates(reads: ReadSet, index: SeedIndex, *, seed_len: int, stride: int,
-                backend=None):
-    """Per-seed candidate placements [R, S] (contig, cstart, orient).
-
-    Read-seed extraction shares the fused kernel path: the [R, W] canonical
-    lanes are computed once and the stride columns selected from them
-    (canonicalization commutes with column selection, so this is
-    bit-identical to canonicalizing the selected forward codes).
-    """
-    lanes = ops.kmer_extract(reads.bases, reads.lengths, k=seed_len,
-                             backend=backend)
-    pos_list = _seed_positions(reads.max_len, seed_len, stride)
-    S = len(pos_list)
-    pcols = jnp.array(pos_list, dtype=jnp.int32)
-    chi = lanes.hi[:, pcols]
-    clo = lanes.lo[:, pcols]
-    sval = lanes.valid[:, pcols]
-    rflip = lanes.flip[:, pcols]
-    slots = dht.lookup(index.table, chi, clo, sval)
-    ok = (slots >= 0) & ~index.multi[jnp.clip(slots, 0)]
-    cc = jnp.where(ok, index.contig[jnp.clip(slots, 0)], NONE)
-    cpos = index.pos[jnp.clip(slots, 0)]
-    cflip = index.flip[jnp.clip(slots, 0)]
-    # same-strand iff the read seed and contig seed canonicalized with the
-    # same flip
-    same = rflip == cflip
-    j = jnp.broadcast_to(pcols[None, :], cc.shape)
-    L = reads.lengths[:, None]
-    cstart_fwd = cpos - j
-    # RC placement: read base L-1 maps to cstart; base 0 maps to
-    # cpos + seed_len - 1 ... derive: contig coord of read base i (rc) =
-    # cstart_rc + (L - 1 - i); seed start j covers read bases j..j+sl-1 →
-    # contig pos cpos..cpos+sl-1 hold read bases j+sl-1..j (complemented):
-    # cpos = cstart_rc + (L - 1 - (j + seed_len - 1))
-    cstart_rc = cpos - (L - j - seed_len)
-    cstart = jnp.where(same, cstart_fwd, cstart_rc)
-    orient = jnp.where(same, 0, 1).astype(jnp.uint8)
-    return (
-        jnp.where(ok, cc, NONE),
-        jnp.where(ok, cstart, 0),
-        orient,
-    )
-
-
 def _verify(reads: ReadSet, contigs: ContigSet, cid, cstart, orient):
     """Hamming-extension verification of one candidate per read."""
     R, L = reads.bases.shape
@@ -178,8 +134,46 @@ def _verify(reads: ReadSet, contigs: ContigSet, cid, cstart, orient):
     return match.sum(axis=-1), inside.sum(axis=-1)
 
 
+def _verify_gapped(reads: ReadSet, contigs: ContigSet, cid, cstart, orient,
+                   *, backend=None):
+    """Banded Smith-Waterman verification via `ops.sw_extend` (gapped path).
+
+    The query is the read oriented onto the contig's forward strand; the
+    target is the L-wide contig window starting at cstart (sentinel 4s
+    outside the contig, so overhangs score as mismatches exactly like the
+    Hamming path treats them as non-matches).  Returns (score, overlap):
+    the extension DP score replaces the Hamming match count, and the
+    overlap lane keeps the Hamming inside-count so downstream consumers
+    (scaffolding's overlap arithmetic, the `ov >= seed_len` floor) see the
+    same geometry either way.
+    """
+    R, L = reads.bases.shape
+    _, ov = _verify(reads, contigs, cid, cstart, orient)
+    i = jnp.arange(L, dtype=jnp.int32)[None, :]
+    rlen = reads.lengths[:, None]
+    # reverse-complemented read, front-packed to its live length
+    rc_idx = jnp.clip(rlen - 1 - i, 0)
+    rc = kmer.complement_base(
+        jnp.take_along_axis(reads.bases, rc_idx, axis=1)
+    )
+    rc = jnp.where(i < rlen, rc, jnp.uint8(4))
+    q = jnp.where(orient[:, None] == 0, reads.bases, rc)
+    cpos = cstart[:, None] + i
+    clen = jnp.where(cid >= 0, contigs.lengths[jnp.clip(cid, 0)], 0)
+    tin = (cpos >= 0) & (cpos < clen[:, None])
+    t = jnp.where(
+        tin, contigs.bases[jnp.clip(cid, 0)[:, None], jnp.clip(cpos, 0)],
+        jnp.uint8(4),
+    )
+    qlen = jnp.where(cid >= 0, reads.lengths, 0)
+    tlen = jnp.where(cid >= 0, jnp.int32(L), 0)
+    score, _, _ = ops.sw_extend(q, t, qlen, tlen, backend=backend)
+    return score, ov
+
+
 @functools.partial(
-    jax.jit, static_argnames=("seed_len", "stride", "min_frac", "backend")
+    jax.jit, static_argnames=("seed_len", "stride", "min_frac", "gapped",
+                              "backend")
 )
 def align_reads(
     reads: ReadSet,
@@ -189,29 +183,44 @@ def align_reads(
     seed_len: int,
     stride: int = 16,
     min_frac: float = 0.9,
+    gapped: bool = False,
     backend=None,
 ) -> Alignments:
-    cc, cstart, orient = _candidates(reads, index, seed_len=seed_len,
-                                     stride=stride, backend=backend)
-    R, S = cc.shape
-    # vote: support of candidate s = #seeds proposing the same placement
-    same = (
-        (cc[:, :, None] == cc[:, None, :])
-        & (cstart[:, :, None] == cstart[:, None, :])
-        & (orient[:, :, None] == orient[:, None, :])
-        & (cc[:, :, None] >= 0)
+    """Seed-and-extend alignment of a read batch against the seed index.
+
+    The front half (seed extraction at the static stride positions, seed
+    index probe, candidate vote, top-2 distinct-contig selection) is one
+    fused `ops.seed_probe` dispatch (DESIGN.md §8).  Verification is
+    vectorized Hamming extension by default; `gapped=True` scores through
+    the banded Smith-Waterman dispatch (`ops.sw_extend`) instead, with the
+    acceptance floor rescaled to the DP's match/mismatch units
+    (score >= (2*min_frac - 1) * overlap, equal when gap-free).
+    """
+    pos_list = _seed_positions(reads.max_len, seed_len, stride)
+    t = index.table
+    cc, cs, co = ops.seed_probe(
+        reads.bases, reads.lengths,
+        t.slot_hi, t.slot_lo, t.used, t.max_probe,
+        index.contig, index.pos, index.flip, index.multi,
+        seed_len=seed_len, positions=tuple(pos_list), backend=backend,
     )
-    support = same.sum(axis=-1)
-    support = jnp.where(cc >= 0, support, 0)
-    best = jnp.argmax(support, axis=-1)
-    take = lambda a, idx: jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
-    c1, s1, o1 = take(cc, best), take(cstart, best), take(orient, best)
-    # best distinct-contig second candidate
-    support2 = jnp.where((cc != c1[:, None]) & (cc >= 0), support, 0)
-    best2 = jnp.argmax(support2, axis=-1)
-    has2 = jnp.max(support2, axis=-1) > 0
-    c2 = jnp.where(has2, take(cc, best2), NONE)
-    s2, o2 = take(cstart, best2), take(orient, best2)
+    c1, s1, o1 = cc[:, 0], cs[:, 0], co[:, 0]
+    c2, s2, o2 = cc[:, 1], cs[:, 1], co[:, 1]
+    if gapped:
+        m1, ov1 = _verify_gapped(reads, contigs, c1, s1, o1, backend=backend)
+        m2, ov2 = _verify_gapped(reads, contigs, c2, s2, o2, backend=backend)
+        floor = 2.0 * min_frac - 1.0
+        ok1 = (c1 >= 0) & (m1 >= floor * jnp.maximum(ov1, 1)) & (ov1 >= index.seed_len)
+        ok2 = (c2 >= 0) & (m2 >= floor * jnp.maximum(ov2, 1)) & (ov2 >= index.seed_len)
+        return Alignments(
+            contig=jnp.stack(
+                [jnp.where(ok1, c1, NONE), jnp.where(ok2, c2, NONE)], axis=1
+            ),
+            cstart=jnp.stack([s1, s2], axis=1),
+            orient=jnp.stack([o1, o2], axis=1),
+            matches=jnp.stack([m1, m2], axis=1),
+            overlap=jnp.stack([ov1, ov2], axis=1),
+        )
     m1, ov1 = _verify(reads, contigs, c1, s1, o1)
     m2, ov2 = _verify(reads, contigs, c2, s2, o2)
     ok1 = (c1 >= 0) & (m1 >= min_frac * jnp.maximum(ov1, 1)) & (ov1 >= index.seed_len)

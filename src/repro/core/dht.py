@@ -12,6 +12,14 @@ The table is insertion-order independent in the set sense (same keys occupy
 the same *set* of slots regardless of arrival order), which is exactly the
 paper's Use-case-1 commutativity argument.
 
+Both `insert` and `lookup` are kernel hot paths (DESIGN.md §8): the public
+functions dispatch through `kernels.ops.dht_insert` / `ops.dht_lookup`
+(Pallas probe kernel with the table resident in VMEM, or the bit-identical
+jnp path below).  `insert_jnp` / `lookup_jnp` ARE the jnp path — they serve
+as the `ref` backend and as the oracle the kernels are tested against, so
+oracle code (kernels/ref.py) calls them directly and never re-enters the
+dispatch.
+
 Capacity must be a power of two.  Keys are (hi, lo) uint32 pairs with
 hi != EMPTY_HI (guaranteed for packed k-mers, k <= 31).
 """
@@ -49,8 +57,12 @@ def empty_table(capacity: int) -> HashTable:
     )
 
 
-def insert(table: HashTable, hi, lo, valid):
+def insert(table: HashTable, hi, lo, valid, *, backend=None):
     """Insert keys (deduplicating against existing entries).
+
+    Dispatches through `kernels.ops.dht_insert` (DESIGN.md §8): the Pallas
+    kernel runs the same bulk-synchronous rounds with the table resident in
+    VMEM; `backend=None` follows the env > plan > hardware-default rules.
 
     Args:
       hi, lo: [n] uint32 key lanes.
@@ -59,6 +71,23 @@ def insert(table: HashTable, hi, lo, valid):
       (table', slots): slots[i] is the slot index of key i (-1 if invalid
       or the table overflowed for that key).
     """
+    from repro.kernels import ops
+
+    slot_hi, slot_lo, used, max_probe, slots = ops.dht_insert(
+        table.slot_hi, table.slot_lo, table.used,
+        jnp.asarray(table.max_probe, jnp.int32),
+        hi, lo, valid, backend=backend,
+    )
+    return (
+        HashTable(slot_hi=slot_hi, slot_lo=slot_lo, used=used,
+                  max_probe=max_probe),
+        slots,
+    )
+
+
+def insert_jnp(table: HashTable, hi, lo, valid):
+    """The jnp insert rounds: `ref` backend of `ops.dht_insert` AND the
+    oracle the Pallas kernel is held bit-identical to."""
     cap = table.capacity
     mask = jnp.uint32(cap - 1)
     n = hi.shape[0]
@@ -66,12 +95,17 @@ def insert(table: HashTable, hi, lo, valid):
 
     def cond(state):
         _, _, _, done, _, probes = state
-        # stop when everyone is done or a key has probed the whole table
-        return jnp.any(~done) & (jnp.max(probes) < cap)
+        # per-key termination: a key is live while it is not done AND has
+        # not yet probed the whole table.  (A global `max(probes) < cap`
+        # here would let one table-exhausting key halt the loop for every
+        # other still-pending key, mislabeling them as overflow.)
+        return jnp.any(~done & (probes < cap))
 
     def body(state):
         slot_hi, slot_lo, used, done, attempt, probes = state
-        pending = ~done
+        # keys that probed the whole table are exhausted: they stop
+        # claiming/advancing and fall out of the loop per-key
+        pending = ~done & (probes < cap)
         cur_used = used[attempt]
         cur_match = cur_used & kmer.equal(slot_hi[attempt], slot_lo[attempt], hi, lo)
         # pending keys whose current slot already holds the same key: dedupe
@@ -116,16 +150,29 @@ def insert(table: HashTable, hi, lo, valid):
     )
 
 
-def build(hi, lo, valid, capacity: int):
+def build(hi, lo, valid, capacity: int, *, backend=None):
     """Build a fresh table from keys (duplicates collapse to one slot)."""
-    return insert(empty_table(capacity), hi, lo, valid)
+    return insert(empty_table(capacity), hi, lo, valid, backend=backend)
 
 
-def lookup(table: HashTable, hi, lo, valid=None):
+def lookup(table: HashTable, hi, lo, valid=None, *, backend=None):
     """Find slot indices for query keys; -1 when absent.
 
     Probes at most max_probe+1 slots; an empty slot ends the chain early.
+    Dispatches through `kernels.ops.dht_lookup` (DESIGN.md §8).
     """
+    from repro.kernels import ops
+
+    return ops.dht_lookup(
+        table.slot_hi, table.slot_lo, table.used,
+        jnp.asarray(table.max_probe, jnp.int32),
+        hi, lo, valid, backend=backend,
+    )
+
+
+def lookup_jnp(table: HashTable, hi, lo, valid=None):
+    """The jnp probe chain: `ref` backend of `ops.dht_lookup` AND the
+    oracle the Pallas kernel is held bit-identical to."""
     cap = table.capacity
     mask = jnp.uint32(cap - 1)
     q = hi.shape
@@ -155,5 +202,5 @@ def lookup(table: HashTable, hi, lo, valid=None):
     return result
 
 
-def contains(table: HashTable, hi, lo, valid=None):
-    return lookup(table, hi, lo, valid) != NOT_FOUND
+def contains(table: HashTable, hi, lo, valid=None, *, backend=None):
+    return lookup(table, hi, lo, valid, backend=backend) != NOT_FOUND

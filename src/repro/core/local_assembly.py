@@ -66,19 +66,21 @@ def localize_reads(reads: ReadSet, aln_contig):
 
 
 def _count_tagged(chi, clo, cleft, cright, valid, tag, *, m: int,
-                  tag_bits: int, table: dht.HashTable, lh, rh):
+                  tag_bits: int, table: dht.HashTable, lh, rh,
+                  backend=None):
     """Tag and histogram canonical (contig,mer) occurrences into a DHT.
 
     Inputs are the already-canonical lanes from the fused extraction kernel
     (`kernels.ops.kmer_extract`, DESIGN.md §8).  Inserts into the given
-    table and accumulates onto the given histograms, so repeated calls fold
+    table through the dispatched `dht.insert` (the `ops.dht_insert` hot
+    path) and accumulates onto the given histograms, so repeated calls fold
     successive occurrence batches into one persistent table (the streaming
     ingest path, DESIGN.md §7).  `dht.insert` dedupes against existing
     entries, and histogram updates are scatter-adds at the returned slots,
     so the result is batch-split independent.
     """
     thi, tlo = kmer.embed_tag(chi, clo, tag, k=m, tag_bits=tag_bits)
-    table, slots = dht.insert(table, thi, tlo, valid)
+    table, slots = dht.insert(table, thi, tlo, valid, backend=backend)
     cap = table.capacity
     lsel = jnp.where(valid & (slots >= 0) & (cleft < 4), slots, cap)
     rsel = jnp.where(valid & (slots >= 0) & (cright < 4), slots, cap)
@@ -128,7 +130,7 @@ def accumulate_walk_tables(
             flat(lanes.left[:, :W]), flat(lanes.right[:, :W]), flat(v),
             flat(tag), m=m, tag_bits=tag_bits,
             table=wt.tables[rung], lh=wt.left_hist[rung],
-            rh=wt.right_hist[rung],
+            rh=wt.right_hist[rung], backend=backend,
         )
         tables.append(t)
         lhs.append(lh)

@@ -349,6 +349,7 @@ def sharded_align(
     *,
     seed_len: int,
     stride: int = 16,
+    gapped: bool = False,
     backend=None,
 ):
     """Align every read to the live contigs, one shard per read block.
@@ -378,7 +379,7 @@ def sharded_align(
         reps = ContigSet(bases=cbases, lengths=clens, depths=cdepths)
         return alignment.align_reads(
             local, reps, idx, seed_len=seed_len, stride=stride,
-            backend=backend,
+            gapped=gapped, backend=backend,
         )
 
     fn = shard_map(

@@ -1,0 +1,221 @@
+"""Pallas TPU kernels: distributed-hash-table probe loops (paper §II-A).
+
+The open-addressed dual-lane table in `core/dht.py` is the substrate of
+every UPC hash-table use case this repo reproduces: the walk tables, the
+seed index, the de Bruijn index.  Its two operations are probe loops —
+`lookup` chases a linear-probe chain per query, `insert` runs
+bulk-synchronous claim rounds over the whole key batch — and unfused they
+re-gather the table from HBM on every round.  These kernels keep the probe
+state in VREGs with the table arrays resident in VMEM:
+
+  * `dht_lookup` tiles the query batch ([BLOCK_QUERIES] lanes per grid
+    step) against one VMEM-resident copy of the table; each tile runs the
+    whole bounded probe chain without leaving registers.
+  * `dht_insert` is a single grid instance: the claim rounds are a global
+    race over ALL keys (scatter-max arbitration), so key tiling would
+    change who wins — the batch and table live in VMEM together and every
+    round happens in-core.
+
+Semantics are bit-identical to `core.dht.lookup_jnp` / `insert_jnp` (the
+jnp oracles, asserted in tests/test_dht.py): same murmur3-fmix hash, same
+first-empty-slot chain termination, same max_probe bound, same
+highest-index-wins race arbitration, and the same per-key exhaustion rule
+(a key that probed the whole table overflows without halting anyone else).
+
+Integer-only VPU work, same dual-lane uint32 convention as the sibling
+kernels (DESIGN.md §2); shift amounts and the capacity mask are static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_QUERIES = 8
+NOT_FOUND = -1
+
+
+def _mix32(x):
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _hash(hi, lo):
+    return _mix32(hi ^ _mix32(lo ^ jnp.uint32(0x9E3779B9)))
+
+
+def _lookup_kernel(qhi_ref, qlo_ref, qvalid_ref, slot_hi_ref, slot_lo_ref,
+                   used_ref, mp_ref, out_ref, *, cap: int):
+    qhi = qhi_ref[...]        # [BQ]
+    qlo = qlo_ref[...]
+    qvalid = qvalid_ref[...]
+    slot_hi = slot_hi_ref[...]  # [cap]
+    slot_lo = slot_lo_ref[...]
+    used = used_ref[...]
+    bound = mp_ref[...][0] + 1
+    attempt = (_hash(qhi, qlo) & jnp.uint32(cap - 1)).astype(jnp.int32)
+
+    def cond(state):
+        _, done, _, i = state
+        # the early all-done exit only skips no-op rounds, so the result is
+        # independent of the query tile width
+        return jnp.any(~done) & (i <= bound)
+
+    def body(state):
+        attempt, done, result, i = state
+        u = used[attempt]
+        match = u & (slot_hi[attempt] == qhi) & (slot_lo[attempt] == qlo)
+        result = jnp.where(match & ~done, attempt, result)
+        done = done | match | ~u
+        attempt = jnp.where(done, attempt, (attempt + 1) & (cap - 1))
+        return attempt, done, result, i + 1
+
+    init = (attempt, ~qvalid, jnp.full(qhi.shape, NOT_FOUND, jnp.int32),
+            jnp.int32(0))
+    _, _, result, _ = jax.lax.while_loop(cond, body, init)
+    out_ref[...] = result
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "block_queries")
+)
+def dht_lookup(
+    slot_hi,
+    slot_lo,
+    used,
+    max_probe,
+    hi,
+    lo,
+    valid,
+    *,
+    interpret: bool | None = None,
+    block_queries: int = BLOCK_QUERIES,
+):
+    """Slot index per query key (-1 absent), table resident in VMEM.
+
+    Args:
+      slot_hi/lo, used: [cap] table arrays (cap a power of two).
+      max_probe: [1] int32 probe bound.
+      hi, lo: [N] uint32 query lanes (N divisible by block_queries).
+      valid: [N] bool.
+    Returns:
+      [N] int32 slot indices, NOT_FOUND where absent/invalid.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N = hi.shape[0]
+    cap = slot_hi.shape[0]
+    assert N % block_queries == 0, f"N={N} not divisible by {block_queries}"
+    grid = (N // block_queries,)
+    vec = lambda: pl.BlockSpec((block_queries,), lambda i: (i,))
+    full = lambda n: pl.BlockSpec((n,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_lookup_kernel, cap=cap),
+        grid=grid,
+        in_specs=[vec(), vec(), vec(), full(cap), full(cap), full(cap),
+                  full(1)],
+        out_specs=vec(),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.int32),
+        interpret=interpret,
+    )(hi, lo, valid, slot_hi, slot_lo, used, max_probe)
+
+
+def _insert_kernel(khi_ref, klo_ref, kvalid_ref, slot_hi_ref, slot_lo_ref,
+                   used_ref, mp_ref, out_hi_ref, out_lo_ref, out_used_ref,
+                   out_mp_ref, slots_ref, *, cap: int):
+    hi = khi_ref[...]         # [N]
+    lo = klo_ref[...]
+    valid = kvalid_ref[...]
+    slot_hi0 = slot_hi_ref[...]  # [cap]
+    slot_lo0 = slot_lo_ref[...]
+    used0 = used_ref[...]
+    mp0 = mp_ref[...][0]
+    n = hi.shape[0]
+    h0 = (_hash(hi, lo) & jnp.uint32(cap - 1)).astype(jnp.int32)
+
+    def cond(state):
+        _, _, _, done, _, probes = state
+        return jnp.any(~done & (probes < cap))
+
+    def body(state):
+        slot_hi, slot_lo, used, done, attempt, probes = state
+        pending = ~done & (probes < cap)
+        cur_used = used[attempt]
+        cur_match = cur_used & (slot_hi[attempt] == hi) & (slot_lo[attempt] == lo)
+        done_dup = pending & cur_match
+        can_try = pending & ~cur_used
+        owner = jnp.full((cap,), -1, jnp.int32)
+        idx = jnp.arange(n, dtype=jnp.int32)
+        owner = owner.at[jnp.where(can_try, attempt, cap)].max(
+            idx, mode="drop", indices_are_sorted=False
+        )
+        winner = can_try & (owner[attempt] == idx)
+        sel = jnp.where(winner, attempt, cap)
+        slot_hi = slot_hi.at[sel].set(hi, mode="drop")
+        slot_lo = slot_lo.at[sel].set(lo, mode="drop")
+        used = used.at[sel].set(True, mode="drop")
+        new_done = done | winner | done_dup
+        advance = pending & cur_used & ~cur_match
+        attempt = jnp.where(advance, (attempt + 1) & (cap - 1), attempt)
+        probes = probes + advance.astype(jnp.int32)
+        return slot_hi, slot_lo, used, new_done, attempt, probes
+
+    init = (slot_hi0, slot_lo0, used0, ~valid, h0,
+            jnp.zeros((n,), jnp.int32))
+    slot_hi, slot_lo, used, done, attempt, probes = jax.lax.while_loop(
+        cond, body, init
+    )
+    overflow = ~done & valid
+    out_hi_ref[...] = slot_hi
+    out_lo_ref[...] = slot_lo
+    out_used_ref[...] = used
+    out_mp_ref[...] = jnp.maximum(mp0, jnp.max(probes))[None]
+    slots_ref[...] = jnp.where(valid & ~overflow, attempt, NOT_FOUND)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dht_insert(
+    slot_hi,
+    slot_lo,
+    used,
+    max_probe,
+    hi,
+    lo,
+    valid,
+    *,
+    interpret: bool | None = None,
+):
+    """Bulk-synchronous insert rounds in one fused pass, table in VMEM.
+
+    A single grid instance on purpose: the claim rounds scatter-race over
+    the WHOLE key batch, so tiling keys would change race winners relative
+    to the jnp oracle.  Args as `dht_lookup` plus [N] key lanes to insert.
+    Returns (slot_hi, slot_lo, used, max_probe [1], slots [N]).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N = hi.shape[0]
+    cap = slot_hi.shape[0]
+    full = lambda n: pl.BlockSpec((n,), lambda i: (0,))
+    out_shape = [
+        jax.ShapeDtypeStruct((cap,), jnp.uint32),
+        jax.ShapeDtypeStruct((cap,), jnp.uint32),
+        jax.ShapeDtypeStruct((cap,), jnp.bool_),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((N,), jnp.int32),
+    ]
+    return pl.pallas_call(
+        functools.partial(_insert_kernel, cap=cap),
+        grid=(1,),
+        in_specs=[full(N), full(N), full(N), full(cap), full(cap), full(cap),
+                  full(1)],
+        out_specs=[full(cap), full(cap), full(cap), full(1), full(N)],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(hi, lo, valid, slot_hi, slot_lo, used, max_probe)

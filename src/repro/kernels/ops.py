@@ -24,7 +24,11 @@ all extraction/canonicalization/hashing in core/, stream/, and dist/ goes
 through this module — call `kernels.kmer_extract` nowhere else.  The
 traversal twin is `mer_walk`: every §II-G contig-extension and §III-D
 gap-closing ladder walk (Local, Mesh shard bodies, streaming driver)
-dispatches here too.
+dispatches here too.  The alignment hot path rounds out the set:
+`seed_probe` (fused seed extraction + index probe + candidate vote,
+§II-F), `sw_extend` (banded extension DP), and the `dht_insert` /
+`dht_lookup` pair that backs `core.dht` — and through it every hash-table
+build and probe in the system (§II-A).
 """
 from __future__ import annotations
 
@@ -33,14 +37,18 @@ import os
 import jax
 import jax.numpy as jnp
 
+from . import dht_probe as _dp
 from . import flash_attention as _fa
 from . import kmer_extract as _ke
 from . import mer_walk as _mw
 from . import ref
+from . import seed_probe as _sp
 from . import ssd_scan as _ssd
 from . import sw_extend as _sw
+from .dht_probe import BLOCK_QUERIES  # re-export  # noqa: F401
 from .kmer_extract import BLOCK_READS, KmerLanes  # re-export  # noqa: F401
 from .mer_walk import BLOCK_WALKERS, MerWalkOut  # re-export  # noqa: F401
+from .sw_extend import BLOCK_B  # re-export  # noqa: F401
 
 BACKENDS = ("pallas", "ref")
 ENV_VAR = "REPRO_KERNELS"
@@ -213,11 +221,124 @@ def kmer_hash(hi, lo):
     return _kmer.kmer_hash(hi, lo)
 
 
+def dht_lookup(slot_hi, slot_lo, used, max_probe, hi, lo, valid=None, *,
+               backend=None):
+    """Slot index per query key against an open-addressed table (§II-A).
+
+    The single DHT probe path of the system: `core.dht.lookup` lands here
+    (array-level interface so kernels stay leaf modules).  Queries of any
+    shape are flattened, padded to the kernel's BLOCK_QUERIES tiling, and
+    trimmed back; the table arrays ride one VMEM-resident copy per tile.
+    """
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+    if resolve_backend(backend) == "ref":
+        return ref.dht_lookup_ref(slot_hi, slot_lo, used,
+                                  jnp.asarray(max_probe, jnp.int32),
+                                  hi, lo, valid)
+    q = hi.shape
+    fhi, flo = hi.reshape(-1), lo.reshape(-1)
+    fval = valid.reshape(-1)
+    N = fhi.shape[0]
+    pad = (-N) % BLOCK_QUERIES
+    if pad:
+        fhi = jnp.concatenate([fhi, jnp.zeros((pad,), fhi.dtype)])
+        flo = jnp.concatenate([flo, jnp.zeros((pad,), flo.dtype)])
+        fval = jnp.concatenate([fval, jnp.zeros((pad,), bool)])
+    out = _dp.dht_lookup(
+        slot_hi, slot_lo, used,
+        jnp.asarray(max_probe, jnp.int32).reshape(1),
+        fhi, flo, fval, interpret=_interpret(),
+    )
+    if pad:
+        out = out[:N]
+    return out.reshape(q)
+
+
+def dht_insert(slot_hi, slot_lo, used, max_probe, hi, lo, valid, *,
+               backend=None):
+    """Bulk-synchronous insert rounds for an open-addressed table (§II-A).
+
+    `core.dht.insert` (and through it every table build: walk-table fold,
+    seed index, de Bruijn index) lands here.  No key tiling on the pallas
+    path — the claim rounds are a global race, so the whole batch and the
+    table share one kernel instance (see kernels/dht_probe.py).
+    Returns (slot_hi, slot_lo, used, max_probe, slots), max_probe scalar.
+    """
+    if resolve_backend(backend) == "ref":
+        return ref.dht_insert_ref(slot_hi, slot_lo, used,
+                                  jnp.asarray(max_probe, jnp.int32),
+                                  hi, lo, valid)
+    shi, slo, u, mp, slots = _dp.dht_insert(
+        slot_hi, slot_lo, used,
+        jnp.asarray(max_probe, jnp.int32).reshape(1),
+        hi, lo, valid, interpret=_interpret(),
+    )
+    return shi, slo, u, mp[0], slots
+
+
+def seed_probe(bases, lengths, slot_hi, slot_lo, used, max_probe,
+               contig, pos, flip, multi, *, seed_len: int, positions,
+               backend=None):
+    """Fused alignment front half (§II-F): seeds -> voted top-2 placements.
+
+    `alignment.align_reads` dispatches here: per-read seed extraction at
+    the static stride positions, canonicalization, linear probe of the
+    VMEM-resident seed index, candidate placement, and the O(S^2) vote +
+    top-2 distinct-contig selection — one kernel pass per read tile.  Rows
+    are padded to the BLOCK_READS tiling internally and trimmed back.
+    Returns (contig, cstart, orient), each [R, 2] (-1 contig = unplaced).
+    """
+    positions = tuple(positions)
+    if resolve_backend(backend) == "ref":
+        return ref.seed_probe_ref(
+            bases, lengths, slot_hi, slot_lo, used,
+            jnp.asarray(max_probe, jnp.int32),
+            contig, pos, flip, multi,
+            seed_len=seed_len, positions=positions,
+        )
+    R, L = bases.shape
+    pad = (-R) % _sp.BLOCK_READS
+    if pad:
+        bases = jnp.concatenate([bases, jnp.full((pad, L), 4, bases.dtype)])
+        lengths = jnp.concatenate([lengths, jnp.zeros((pad,), lengths.dtype)])
+    c, s, o = _sp.seed_probe(
+        bases, lengths, slot_hi, slot_lo, used,
+        jnp.asarray(max_probe, jnp.int32).reshape(1),
+        contig, pos, flip, multi,
+        seed_len=seed_len, positions=positions, interpret=_interpret(),
+    )
+    if pad:
+        c, s, o = c[:R], s[:R], o[:R]
+    return c, s, o
+
+
 def sw_extend(query, target, qlen, tlen, *, band: int = 15, backend=None,
               use_kernel=None, **kw):
+    """Banded SW extension scores (§II-F), rows padded to the kernel tile.
+
+    Padded rows carry zero lengths and sentinel bases, so their scores are
+    0 and get trimmed; callers never see the BLOCK_B constraint.
+    """
     if resolve_backend(_legacy(use_kernel, backend)) == "pallas":
-        return _sw.sw_extend(query, target, qlen, tlen, band=band,
-                             interpret=_interpret(), **kw)
+        B, QL = query.shape
+        TL = target.shape[1]
+        block_b = kw.pop("block_b", BLOCK_B)
+        pad = (-B) % block_b
+        if pad:
+            query = jnp.concatenate(
+                [query, jnp.full((pad, QL), 4, query.dtype)]
+            )
+            target = jnp.concatenate(
+                [target, jnp.full((pad, TL), 4, target.dtype)]
+            )
+            qlen = jnp.concatenate([qlen, jnp.zeros((pad,), qlen.dtype)])
+            tlen = jnp.concatenate([tlen, jnp.zeros((pad,), tlen.dtype)])
+        out = _sw.sw_extend(query, target, qlen, tlen, band=band,
+                            interpret=_interpret(), block_b=block_b, **kw)
+        if pad:
+            out = tuple(x[:B] for x in out)
+        return out
     return ref.sw_extend_ref(query, target, qlen, tlen, band=band, **kw)
 
 

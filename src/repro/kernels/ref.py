@@ -97,7 +97,7 @@ def mer_walk_ref(
         mhi, mlo = suffix(buf_hi, buf_lo, m)
         chi, clo, flip = kmer.canonical(mhi, mlo, k=m)
         thi, tlo = kmer.embed_tag(chi, clo, contig, k=m, tag_bits=tag_bits)
-        slots = dht.lookup(tables[r], thi, tlo, act)
+        slots = dht.lookup_jnp(tables[r], thi, tlo, act)
         ok = slots >= 0
         s = jnp.clip(slots, 0)
         rsel = right_hist[r][s]
@@ -186,6 +186,91 @@ def mer_walk_ref(
     )
     return MerWalkOut(ext_bases=out, ext_len=out_len, status=status, hit=hit,
                       hit_pos=hit_pos)
+
+
+def dht_lookup_ref(slot_hi, slot_lo, used, max_probe, hi, lo, valid):
+    """Oracle for kernels.dht_probe.dht_lookup: `core.dht.lookup_jnp`.
+
+    The jnp probe chain IS the ref backend — this wrapper only adapts the
+    kernel's array-level interface onto the HashTable record.
+    """
+    table = dht.HashTable(slot_hi=slot_hi, slot_lo=slot_lo, used=used,
+                          max_probe=max_probe)
+    return dht.lookup_jnp(table, hi, lo, valid)
+
+
+def dht_insert_ref(slot_hi, slot_lo, used, max_probe, hi, lo, valid):
+    """Oracle for kernels.dht_probe.dht_insert: `core.dht.insert_jnp`."""
+    table = dht.HashTable(slot_hi=slot_hi, slot_lo=slot_lo, used=used,
+                          max_probe=max_probe)
+    out, slots = dht.insert_jnp(table, hi, lo, valid)
+    return out.slot_hi, out.slot_lo, out.used, out.max_probe, slots
+
+
+@functools.partial(jax.jit, static_argnames=("seed_len", "positions"))
+def seed_probe_ref(bases, lengths, slot_hi, slot_lo, used, max_probe,
+                   contig, pos, flip, multi, *, seed_len: int,
+                   positions: tuple):
+    """Oracle for kernels.seed_probe: the historical alignment front half.
+
+    This IS the pre-fusion `alignment._candidates` gather loop plus the
+    `align_reads` vote, op for op: full-width `kmer_extract_ref` lanes
+    selected at the static stride columns (canonicalization commutes with
+    column selection), `dht.lookup_jnp` against the seed index, candidate
+    placement from the flip parity, then the O(S^2) agreement vote and the
+    top-2 distinct-contig selection.  Kept BIT-identical to the Pallas
+    kernel (tests/test_seed_probe_parity.py) — including the unmasked
+    orient lanes of unplaced reads, which is why the kernel reproduces
+    `core.kmer.append_base`'s unmasked packing of N bases.
+    """
+    NONE = jnp.int32(-1)
+    table = dht.HashTable(slot_hi=slot_hi, slot_lo=slot_lo, used=used,
+                          max_probe=max_probe)
+    lanes = kmer_extract_ref(bases, lengths, k=seed_len)
+    pcols = jnp.array(positions, dtype=jnp.int32)
+    chi = lanes.hi[:, pcols]
+    clo = lanes.lo[:, pcols]
+    sval = lanes.valid[:, pcols]
+    rflip = lanes.flip[:, pcols]
+    slots = dht.lookup_jnp(table, chi, clo, sval)
+    ok = (slots >= 0) & ~multi[jnp.clip(slots, 0)]
+    cc = jnp.where(ok, contig[jnp.clip(slots, 0)], NONE)
+    cpos = pos[jnp.clip(slots, 0)]
+    cflip = flip[jnp.clip(slots, 0)]
+    # same-strand iff the read seed and contig seed canonicalized with the
+    # same flip
+    same = rflip == cflip
+    j = jnp.broadcast_to(pcols[None, :], cc.shape)
+    L = lengths[:, None]
+    cstart_fwd = cpos - j
+    cstart_rc = cpos - (L - j - seed_len)
+    cstart = jnp.where(same, cstart_fwd, cstart_rc)
+    orient = jnp.where(same, 0, 1).astype(jnp.uint8)
+    cc = jnp.where(ok, cc, NONE)
+    cstart = jnp.where(ok, cstart, 0)
+    # vote: support of candidate s = #seeds proposing the same placement
+    agree = (
+        (cc[:, :, None] == cc[:, None, :])
+        & (cstart[:, :, None] == cstart[:, None, :])
+        & (orient[:, :, None] == orient[:, None, :])
+        & (cc[:, :, None] >= 0)
+    )
+    support = agree.sum(axis=-1)
+    support = jnp.where(cc >= 0, support, 0)
+    best = jnp.argmax(support, axis=-1)
+    take = lambda a, idx: jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
+    c1, s1, o1 = take(cc, best), take(cstart, best), take(orient, best)
+    # best distinct-contig second candidate
+    support2 = jnp.where((cc != c1[:, None]) & (cc >= 0), support, 0)
+    best2 = jnp.argmax(support2, axis=-1)
+    has2 = jnp.max(support2, axis=-1) > 0
+    c2 = jnp.where(has2, take(cc, best2), NONE)
+    s2, o2 = take(cstart, best2), take(orient, best2)
+    return (
+        jnp.stack([c1, c2], axis=1),
+        jnp.stack([s1, s2], axis=1),
+        jnp.stack([o1, o2], axis=1),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("band", "match", "mismatch", "gap"))

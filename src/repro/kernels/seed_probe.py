@@ -1,0 +1,257 @@
+"""Pallas TPU kernel: fused seed probe + candidate vote (merAligner §II-F).
+
+merAligner's alignment front half is, per read: extract the seed k-mers at
+the stride positions, canonicalize each, look it up in the seed index (a
+hash table over contig k-mers), turn each hit into a candidate placement
+(contig, cstart, orient), and vote the candidates down to the best two
+distinct-contig placements.  Unfused, that is an extraction pass, a probe
+chain, four gathers into the seed-index side arrays, and an O(S^2)
+agreement count — each round-tripping [R, S] intermediates through HBM.
+
+This kernel runs the whole front half for a [BLOCK_READS] read tile in one
+pass: the packed seed codes are built in VREGs from static column slices
+(S and the stride positions are static), the canonicalization and probe
+chain reuse the exact lane math of the sibling kernels, the seed-index
+arrays (keys, used, contig, pos, flip, multi) are fetched once and stay in
+VMEM for every tile, and the vote + top-2 selection happen on the [B, S]
+candidates before anything is written back — the only HBM traffic is six
+[B] output lanes.
+
+Semantics are bit-identical to `kernels.ref.seed_probe_ref` (the jnp
+oracle: full-width `kmer_extract_ref` lanes selected at the stride columns,
+`dht.lookup_jnp`, and the historical `align_reads` vote), asserted in
+tests/test_seed_probe_parity.py.  Canonicalization commutes with column
+selection, so extracting at the stride positions directly matches
+selecting from the full rolling extraction.
+
+Integer-only VPU work, dual-lane uint32 convention (DESIGN.md §2): all
+shift amounts, the capacity mask, and the probe-loop structure are static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_READS = 8
+NONE = -1
+
+
+def _masks(k: int):
+    bits = 2 * k
+    if bits >= 32:
+        return jnp.uint32(0xFFFFFFFF), jnp.uint32((1 << (bits - 32)) - 1)
+    return jnp.uint32((1 << bits) - 1), jnp.uint32(0)
+
+
+def _mix32(x):
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _hash(hi, lo):
+    return _mix32(hi ^ _mix32(lo ^ jnp.uint32(0x9E3779B9)))
+
+
+def _rev32_2bit(x):
+    x = ((x & jnp.uint32(0x33333333)) << 2) | ((x >> 2) & jnp.uint32(0x33333333))
+    x = ((x & jnp.uint32(0x0F0F0F0F)) << 4) | ((x >> 4) & jnp.uint32(0x0F0F0F0F))
+    x = ((x & jnp.uint32(0x00FF00FF)) << 8) | ((x >> 8) & jnp.uint32(0x00FF00FF))
+    return (x << 16) | (x >> 16)
+
+
+def _canonical(hi, lo, k: int):
+    """(chi, clo, flip): lexicographic min of the mer and its RC."""
+    mask_lo, mask_hi = _masks(k)
+    bits = 2 * k
+    clo = (~lo) & mask_lo
+    if k <= 16:
+        r = _rev32_2bit(clo)
+        rlo = r >> (32 - bits) if k < 16 else r
+        rhi = jnp.zeros_like(hi)
+    else:
+        chi = (~hi) & mask_hi
+        rhi64 = _rev32_2bit(clo)
+        rlo64 = _rev32_2bit(chi)
+        s = 64 - bits
+        if s == 0:
+            rhi, rlo = rhi64, rlo64
+        elif s >= 32:
+            rhi, rlo = jnp.zeros_like(hi), rhi64 >> (s - 32)
+        else:
+            rhi = rhi64 >> s
+            rlo = (rlo64 >> s) | (rhi64 << (32 - s))
+    flip = (rhi < hi) | ((rhi == hi) & (rlo < lo))
+    return jnp.where(flip, rhi, hi), jnp.where(flip, rlo, lo), flip
+
+
+def _probe(key_hi, key_lo, valid, slot_hi, slot_lo, used, bound, cap: int):
+    """First matching slot per key along the linear-probe chain, -1 absent.
+
+    Mirrors `core.dht.lookup_jnp` op for op; the early all-done exit only
+    skips no-op rounds, so the result is tile-width independent.
+    """
+    h0 = (_hash(key_hi, key_lo) & jnp.uint32(cap - 1)).astype(jnp.int32)
+
+    def cond(state):
+        _, done, _, i = state
+        return jnp.any(~done) & (i <= bound)
+
+    def body(state):
+        attempt, done, result, i = state
+        u = used[attempt]
+        match = u & (slot_hi[attempt] == key_hi) & (slot_lo[attempt] == key_lo)
+        result = jnp.where(match & ~done, attempt, result)
+        done = done | match | ~u
+        attempt = jnp.where(done, attempt, (attempt + 1) & (cap - 1))
+        return attempt, done, result, i + 1
+
+    init = (h0, ~valid, jnp.full(key_hi.shape, -1, jnp.int32), jnp.int32(0))
+    _, _, result, _ = jax.lax.while_loop(cond, body, init)
+    return result
+
+
+def _kernel(bases_ref, lengths_ref, slot_hi_ref, slot_lo_ref, used_ref,
+            mp_ref, contig_ref, pos_ref, flip_ref, multi_ref,
+            c_ref, s_ref, o_ref, *, seed_len: int, positions: tuple):
+    b = bases_ref[...]        # [B, L] uint8
+    lengths = lengths_ref[...]  # [B]
+    slot_hi = slot_hi_ref[...]  # [cap]
+    slot_lo = slot_lo_ref[...]
+    used = used_ref[...]
+    bound = mp_ref[...][0] + 1
+    s_contig = contig_ref[...]  # [cap]
+    s_pos = pos_ref[...]
+    s_flip = flip_ref[...]
+    s_multi = multi_ref[...]
+    B = b.shape[0]
+    S = len(positions)
+    cap = slot_hi.shape[0]
+    bi = b.astype(jnp.uint32)
+    mask_lo, mask_hi = _masks(seed_len)
+    # rolling 2-bit pack of the S static seed windows, MSB-first.  The base
+    # is NOT masked to 2 bits — `core.kmer.append_base` doesn't either, and
+    # the ref oracle's lanes at windows containing N bases feed the
+    # (unmasked) orient output, so garbage must match bit for bit too.
+    hi = jnp.zeros((B, S), jnp.uint32)
+    lo = jnp.zeros((B, S), jnp.uint32)
+    anyn = jnp.zeros((B, S), bool)
+    for i in range(seed_len):
+        nb = jnp.stack([bi[:, p + i] for p in positions], axis=1)  # [B, S]
+        anyn = anyn | (nb >= 4)
+        hi = ((hi << 2) | (lo >> 30)) & mask_hi
+        lo = ((lo << 2) | nb) & mask_lo
+    pcols = jnp.stack(
+        [jnp.full((B,), p, jnp.int32) for p in positions], axis=1
+    )  # [B, S] static seed start columns
+    sval = ~anyn & (pcols + seed_len <= lengths[:, None])
+    chi, clo, rflip = _canonical(hi, lo, seed_len)
+    # probe the seed index (one VMEM-resident copy per tile)
+    slots = _probe(chi, clo, sval, slot_hi, slot_lo, used, bound, cap)
+    ok = (slots >= 0) & ~s_multi[jnp.clip(slots, 0)]
+    cc = jnp.where(ok, s_contig[jnp.clip(slots, 0)], NONE)
+    cpos = s_pos[jnp.clip(slots, 0)]
+    cflip = s_flip[jnp.clip(slots, 0)]
+    # same-strand iff the read seed and contig seed canonicalized with the
+    # same flip
+    same = rflip == cflip
+    L = lengths[:, None]
+    cstart_fwd = cpos - pcols
+    cstart_rc = cpos - (L - pcols - seed_len)
+    cstart = jnp.where(same, cstart_fwd, cstart_rc)
+    orient = jnp.where(same, 0, 1).astype(jnp.uint8)
+    cc = jnp.where(ok, cc, NONE)
+    cstart = jnp.where(ok, cstart, 0)
+    # vote: support of candidate s = #seeds proposing the same placement
+    agree = (
+        (cc[:, :, None] == cc[:, None, :])
+        & (cstart[:, :, None] == cstart[:, None, :])
+        & (orient[:, :, None] == orient[:, None, :])
+        & (cc[:, :, None] >= 0)
+    )
+    support = agree.sum(axis=-1)
+    support = jnp.where(cc >= 0, support, 0)
+    best = jnp.argmax(support, axis=-1)
+    take = lambda a, idx: jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
+    c1, s1, o1 = take(cc, best), take(cstart, best), take(orient, best)
+    # best distinct-contig second candidate
+    support2 = jnp.where((cc != c1[:, None]) & (cc >= 0), support, 0)
+    best2 = jnp.argmax(support2, axis=-1)
+    has2 = jnp.max(support2, axis=-1) > 0
+    c2 = jnp.where(has2, take(cc, best2), NONE)
+    s2, o2 = take(cstart, best2), take(orient, best2)
+    c_ref[...] = jnp.stack([c1, c2], axis=1)
+    s_ref[...] = jnp.stack([s1, s2], axis=1)
+    o_ref[...] = jnp.stack([o1, o2], axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("seed_len", "positions", "interpret", "block_reads"),
+)
+def seed_probe(
+    bases,
+    lengths,
+    slot_hi,
+    slot_lo,
+    used,
+    max_probe,
+    contig,
+    pos,
+    flip,
+    multi,
+    *,
+    seed_len: int,
+    positions: tuple,
+    interpret: bool | None = None,
+    block_reads: int = BLOCK_READS,
+):
+    """Voted top-2 candidate placements for a dense read batch.
+
+    Args:
+      bases:   [R, L] uint8 (R divisible by block_reads).
+      lengths: [R] int32.
+      slot_hi/lo, used: [cap] seed-index table arrays; max_probe [1] int32.
+      contig, pos: [cap] int32 side arrays; flip, multi: [cap] bool.
+      seed_len: static seed k.
+      positions: static tuple of seed start columns (stride positions).
+    Returns:
+      (contig, cstart, orient): [R, 2] each (orient uint8); contig -1 when
+      no candidate survived the vote.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    R, L = bases.shape
+    cap = slot_hi.shape[0]
+    assert R % block_reads == 0, f"R={R} not divisible by {block_reads}"
+    assert positions and positions[-1] + seed_len <= L, (positions, L)
+    grid = (R // block_reads,)
+    vec = lambda: pl.BlockSpec((block_reads,), lambda i: (i,))
+    pair = lambda: pl.BlockSpec((block_reads, 2), lambda i: (i, 0))
+    full = lambda n: pl.BlockSpec((n,), lambda i: (0,))
+    out = pl.pallas_call(
+        functools.partial(_kernel, seed_len=seed_len,
+                          positions=tuple(positions)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_reads, L), lambda i: (i, 0)),
+            vec(),
+            full(cap), full(cap), full(cap), full(1),
+            full(cap), full(cap), full(cap), full(cap),
+        ],
+        out_specs=[pair(), pair(), pair()],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, 2), jnp.int32),
+            jax.ShapeDtypeStruct((R, 2), jnp.int32),
+            jax.ShapeDtypeStruct((R, 2), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(bases, lengths, slot_hi, slot_lo, used, max_probe,
+      contig, pos, flip, multi)
+    return out[0], out[1], out[2]

@@ -108,7 +108,7 @@ def sw_extend(
     match: int = 1,
     mismatch: int = -1,
     gap: int = -1,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_b: int = BLOCK_B,
 ):
     """Banded semi-global extension scores for a batch of (query, target).
@@ -117,10 +117,15 @@ def sw_extend(
       query:  [B, QL] uint8 base codes.
       target: [B, TL] uint8.
       qlen, tlen: [B] int32 live lengths.
+      interpret: None resolves by hardware (compiled on TPU, interpreter
+        elsewhere), matching the sibling kernels — `kernels.ops.sw_extend`
+        is the dispatching entry point and handles row padding.
     Returns:
       (best_score, best_qpos, best_tpos): [B] int32 each, 1-based DP
       coordinates of the best-scoring cell (0 = no positive extension).
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, QL = query.shape
     TL = target.shape[1]
     assert B % block_b == 0, f"B={B} not divisible by {block_b}"

@@ -1,10 +1,13 @@
-"""Hash-table build/lookup properties (paper §II-A use cases)."""
+"""Hash-table build/lookup properties (paper §II-A use cases).
+
+Hypothesis sweeps defer their import so the deterministic tests (incl.
+the ISSUE 10 per-key-insert and backend-parity regressions) run even
+where hypothesis is absent; CI sets REPRO_REQUIRE_HYPOTHESIS so the
+sweeps can never silently skip there.
+"""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
 
 from repro.core import dht
 
@@ -17,58 +20,78 @@ def make_keys(rng, n, key_space=1 << 20):
     return jnp.asarray(hi), jnp.asarray(lo), vals
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    st.integers(min_value=1, max_value=200),
-    st.integers(min_value=0, max_value=10_000),
-)
-def test_insert_then_lookup_finds_everything(n, seed):
-    rng = np.random.default_rng(seed)
-    hi, lo, vals = make_keys(rng, n)
-    valid = jnp.ones((n,), bool)
-    table, slots = dht.build(hi, lo, valid, capacity=512)
-    s = np.asarray(slots)
-    assert (s >= 0).all(), "no overflow expected at low load factor"
-    # duplicates must map to the same slot
-    by_val = {}
-    for v, si in zip(vals, s):
-        if v in by_val:
-            assert by_val[v] == si
-        by_val[v] = si
-    # lookups find the same slots
-    found = np.asarray(dht.lookup(table, hi, lo))
-    assert (found == s).all()
+def test_insert_then_lookup_finds_everything():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=200),
+        st.integers(min_value=0, max_value=10_000),
+    )
+    def inner(n, seed):
+        rng = np.random.default_rng(seed)
+        hi, lo, vals = make_keys(rng, n)
+        valid = jnp.ones((n,), bool)
+        table, slots = dht.build(hi, lo, valid, capacity=512)
+        s = np.asarray(slots)
+        assert (s >= 0).all(), "no overflow expected at low load factor"
+        # duplicates must map to the same slot
+        by_val = {}
+        for v, si in zip(vals, s):
+            if v in by_val:
+                assert by_val[v] == si
+            by_val[v] = si
+        # lookups find the same slots
+        found = np.asarray(dht.lookup(table, hi, lo))
+        assert (found == s).all()
+
+    inner()
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(min_value=0, max_value=10_000))
-def test_absent_keys_not_found(seed):
-    rng = np.random.default_rng(seed)
-    hi, lo, vals = make_keys(rng, 100, key_space=1 << 16)
-    table, _ = dht.build(hi, lo, jnp.ones((100,), bool), capacity=512)
-    # query keys guaranteed absent (outside the inserted key space)
-    qv = rng.integers(1 << 17, 1 << 20, size=64, dtype=np.uint64)
-    qhi = jnp.asarray((qv >> 32).astype(np.uint32))
-    qlo = jnp.asarray((qv & 0xFFFFFFFF).astype(np.uint32))
-    found = np.asarray(dht.lookup(table, qhi, qlo))
-    assert (found == -1).all()
+def test_absent_keys_not_found():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def inner(seed):
+        rng = np.random.default_rng(seed)
+        hi, lo, vals = make_keys(rng, 100, key_space=1 << 16)
+        table, _ = dht.build(hi, lo, jnp.ones((100,), bool), capacity=512)
+        # query keys guaranteed absent (outside the inserted key space)
+        qv = rng.integers(1 << 17, 1 << 20, size=64, dtype=np.uint64)
+        qhi = jnp.asarray((qv >> 32).astype(np.uint32))
+        qlo = jnp.asarray((qv & 0xFFFFFFFF).astype(np.uint32))
+        found = np.asarray(dht.lookup(table, qhi, qlo))
+        assert (found == -1).all()
+
+    inner()
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(min_value=0, max_value=1000))
-def test_insertion_order_independence(seed):
+def test_insertion_order_independence():
     """Use-case-1 commutativity: same key set => same slot assignment set."""
-    rng = np.random.default_rng(seed)
-    hi, lo, vals = make_keys(rng, 128)
-    perm = rng.permutation(128)
-    t1, _ = dht.build(hi, lo, jnp.ones((128,), bool), capacity=512)
-    t2, _ = dht.build(hi[perm], lo[perm], jnp.ones((128,), bool), capacity=512)
-    # state may differ slot-by-slot (chaining differs), but lookups agree on
-    # membership — this is the paper's "same state up to representation"
-    f1 = np.asarray(dht.lookup(t1, hi, lo)) >= 0
-    f2 = np.asarray(dht.lookup(t2, hi, lo)) >= 0
-    assert f1.all() and f2.all()
-    assert int(t1.used.sum()) == int(t2.used.sum())
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=1000))
+    def inner(seed):
+        rng = np.random.default_rng(seed)
+        hi, lo, vals = make_keys(rng, 128)
+        perm = rng.permutation(128)
+        t1, _ = dht.build(hi, lo, jnp.ones((128,), bool), capacity=512)
+        t2, _ = dht.build(hi[perm], lo[perm], jnp.ones((128,), bool),
+                          capacity=512)
+        # state may differ slot-by-slot (chaining differs), but lookups
+        # agree on membership — the paper's "same state up to
+        # representation"
+        f1 = np.asarray(dht.lookup(t1, hi, lo)) >= 0
+        f2 = np.asarray(dht.lookup(t2, hi, lo)) >= 0
+        assert f1.all() and f2.all()
+        assert int(t1.used.sum()) == int(t2.used.sum())
+
+    inner()
 
 
 def test_incremental_insert_dedupes():
@@ -103,3 +126,103 @@ def test_invalid_keys_ignored():
     assert int(table.used.sum()) == 1
     found = dht.lookup(table, hi, lo, valid=jnp.array([True, True]))
     assert int(found[0]) >= 0 and int(found[1]) == -1
+
+
+def test_full_table_batch_mixes_overflow_and_dedupe():
+    """Per-key insert termination (ISSUE 10 bugfix): in one batch, a key
+    that exhausts its probe budget (every slot used, no match) must not
+    clamp the other keys' outcomes — duplicates in the same batch still
+    dedupe to their original slots.  The old loop condition halted ALL
+    keys once the max probe count hit capacity."""
+    rng = np.random.default_rng(3)
+    cap = 8
+    hi, lo, _ = make_keys(rng, cap, key_space=1 << 16)
+    table, s1 = dht.build(hi, lo, jnp.ones((cap,), bool), capacity=cap)
+    s1 = np.asarray(s1)
+    assert (s1 >= 0).all() and int(table.used.sum()) == cap
+    # batch: a guaranteed-absent key (outside the inserted key space; the
+    # full table makes it probe all cap slots) + two duplicates
+    av = np.uint64(1 << 18)
+    bhi = jnp.asarray([np.uint32(av >> 32), hi[2], hi[5]], jnp.uint32)
+    blo = jnp.asarray([np.uint32(av & 0xFFFFFFFF), lo[2], lo[5]],
+                      jnp.uint32)
+    for backend in ("pallas", "ref"):
+        t2, s2 = dht.insert(table, bhi, blo, jnp.ones((3,), bool),
+                            backend=backend)
+        assert int(s2[0]) == -1, "absent key on a full table overflows"
+        assert int(s2[1]) == int(s1[2]), "dup dedupes despite overflow"
+        assert int(s2[2]) == int(s1[5])
+        assert int(t2.used.sum()) == cap
+
+
+@pytest.mark.parametrize("n,cap", [(5, 16), (60, 64), (80, 64)])
+def test_backend_parity_insert_lookup(n, cap):
+    """pallas and ref dht kernels are BIT-identical — table state, insert
+    slots, and lookups (present, absent, 2-D off-tile query shapes) —
+    including n > cap saturation where overflow labels matter."""
+    rng = np.random.default_rng(n * 7 + cap)
+    hi, lo, _ = make_keys(rng, n, key_space=1 << 16)
+    valid = jnp.asarray(rng.random(n) < 0.9)
+    tp, sp = dht.build(hi, lo, valid, capacity=cap, backend="pallas")
+    tr, sr = dht.build(hi, lo, valid, capacity=cap, backend="ref")
+    for field in ("slot_hi", "slot_lo", "used"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(tp, field)), np.asarray(getattr(tr, field)),
+            err_msg=field,
+        )
+    assert int(tp.max_probe) == int(tr.max_probe)
+    np.testing.assert_array_equal(np.asarray(sp), np.asarray(sr))
+    # queries: half present, half guaranteed absent, awkward 2-D shape
+    qv = rng.integers(1 << 17, 1 << 20, size=n, dtype=np.uint64)
+    qhi = jnp.concatenate([hi, jnp.asarray((qv >> 32).astype(np.uint32))])
+    qlo = jnp.concatenate(
+        [lo, jnp.asarray((qv & 0xFFFFFFFF).astype(np.uint32))]
+    )
+    qhi, qlo = qhi.reshape(2, -1), qlo.reshape(2, -1)
+    fp = np.asarray(dht.lookup(tp, qhi, qlo, backend="pallas"))
+    fr = np.asarray(dht.lookup(tr, qhi, qlo, backend="ref"))
+    assert fp.shape == qhi.shape
+    np.testing.assert_array_equal(fp, fr)
+
+
+def test_dht_backend_parity_property():
+    """Hypothesis sweep: capacities 4..256 (incl. 16-slot saturated
+    regions), batches larger than capacity, invalid-key sprinkles, and
+    mixed present/absent lookups — state, slots, and finds bit-identical
+    between backends."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 40),
+        cap_pow=st.integers(2, 8),
+        invalid_frac=st.floats(0.0, 0.5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def inner(n, cap_pow, invalid_frac, seed):
+        rng = np.random.default_rng(seed)
+        cap = 1 << cap_pow
+        hi, lo, _ = make_keys(rng, n, key_space=1 << 16)
+        valid = jnp.asarray(rng.random(n) >= invalid_frac)
+        tp, sp = dht.build(hi, lo, valid, capacity=cap, backend="pallas")
+        tr, sr = dht.build(hi, lo, valid, capacity=cap, backend="ref")
+        for field in ("slot_hi", "slot_lo", "used"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(tp, field)),
+                np.asarray(getattr(tr, field)), err_msg=field,
+            )
+        assert int(tp.max_probe) == int(tr.max_probe)
+        np.testing.assert_array_equal(np.asarray(sp), np.asarray(sr))
+        qv = rng.integers(1 << 17, 1 << 20, size=n, dtype=np.uint64)
+        qhi = jnp.concatenate(
+            [hi, jnp.asarray((qv >> 32).astype(np.uint32))]
+        )
+        qlo = jnp.concatenate(
+            [lo, jnp.asarray((qv & 0xFFFFFFFF).astype(np.uint32))]
+        )
+        fp = np.asarray(dht.lookup(tp, qhi, qlo, backend="pallas"))
+        fr = np.asarray(dht.lookup(tr, qhi, qlo, backend="ref"))
+        np.testing.assert_array_equal(fp, fr)
+
+    inner()
